@@ -1,0 +1,66 @@
+"""Figs. 9 & 10 — impact of row granularity N: step runtime, analytic
+memory, and the coordination counters (OD = overlapped dimensions for
+OverL, SD = sharing data rows for 2PS, CI = computation interruptions)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compiled_temp_bytes, time_fn
+from repro.core import rowplan
+from repro.core.hybrid import make_strategy_apply
+from repro.core.overlap import plan_overlap
+from repro.core.twophase import max_valid_rows, module_boundaries
+from repro.models.cnn.vgg import head_apply, init_vgg16
+
+IMAGE = 64
+BATCH = 8
+
+
+def run() -> List[dict]:
+    key = jax.random.PRNGKey(0)
+    mods, params = init_vgg16(key, (IMAGE, IMAGE, 3), width_mult=0.25,
+                              n_classes=10, n_stages=3)
+    x = jax.random.normal(key, (BATCH, IMAGE, IMAGE, 3))
+    x_spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    p_spec = jax.eval_shape(lambda: params)
+    shape = (IMAGE, IMAGE, 3)
+    rows = []
+    n_max_2ps = max_valid_rows(mods, IMAGE)
+    for n in (1, 2, 4, 6, 8):
+        for strat in ("overlap", "twophase"):
+            if strat == "twophase" and n > n_max_2ps:
+                rows.append({"name": f"fig9_10/{strat}/N{n}",
+                             "status": "exceeds granularity bound",
+                             "n_max": n_max_2ps})
+                continue
+            use_n = n
+            trunk = make_strategy_apply(mods, IMAGE,
+                                        strat if n > 1 else "base", use_n)
+
+            def loss(p, x, trunk=trunk):
+                return jnp.sum(head_apply(p["head"],
+                                          trunk(p["trunk"], x)) ** 2)
+
+            fn = jax.jit(jax.grad(loss))
+            us = time_fn(fn, params, x)
+            tb = compiled_temp_bytes(jax.grad(loss), p_spec, x_spec)
+            est = rowplan.estimate_bytes(mods, shape, BATCH, strat
+                                         if n > 1 else "base", max(1, n))
+            rec = {"name": f"fig9_10/{strat}/N{n}",
+                   "us_per_call": round(us, 1),
+                   "temp_mb": round(tb / 2**20, 1),
+                   "analytic_mb": round(est / 2**20, 1)}
+            # coordination counters (Fig. 9 bottom, Fig. 10(b))
+            if n > 1 and strat == "overlap":
+                plan = plan_overlap(mods, IMAGE, n)
+                rec["OD_rows"] = sum(plan.overlap_rows_level0())
+            if n > 1 and strat == "twophase":
+                plan = module_boundaries(mods, IMAGE, n)
+                rec["SD_rows"] = plan.shared_rows_total()
+                rec["CI_ops"] = (n - 1) * plan.n_levels
+            rows.append(rec)
+    return rows

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference — the CPU
+numbers are correctness/plumbing checks (interpret mode is a Python
+interpreter, not a perf target); the derived columns report the VMEM
+working set + MXU alignment that matter on the real TPU."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels import ops, ref
+from repro.kernels.conv2d_rows import good_tiling, vmem_bytes
+
+
+def run() -> List[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # conv: one paper-scale-ish layer (downscaled for CPU)
+    x = jax.random.normal(key, (2, 56, 56, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 64, 128)) * 0.1
+    ref_fn = jax.jit(lambda x, w: ref.conv2d_ref(x, w, 1, 1))
+    us_ref = time_fn(ref_fn, x, w)
+    rows.append({"name": "kernel/conv2d_rows/ref_jnp",
+                 "us_per_call": round(us_ref, 1)})
+    got = ops.conv2d(x, w, stride=1, padding=1, block_h=8)
+    err = float(jnp.abs(got - ref_fn(x, w)).max())
+    rows.append({
+        "name": "kernel/conv2d_rows/pallas_interpret",
+        "allclose_err": f"{err:.1e}",
+        "vmem_kb": round(vmem_bytes(8, 1, 58, 64, 56, 128, 3, 3) / 1024, 1),
+        "mxu_aligned": good_tiling(64, 128),
+    })
+    # ssd chunked scan (Mamba2 hot spot)
+    from repro.kernels.ssd_chunk import vmem_bytes as ssd_vmem
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (2, 128, 4, 16)) * 0.5
+    Bm = jax.random.normal(ks[1], (2, 128, 8)) * 0.5
+    Cm = jax.random.normal(ks[2], (2, 128, 8)) * 0.5
+    dtm = jax.nn.softplus(jax.random.normal(ks[3], (2, 128, 4)))
+    am = jnp.exp(-dtm)
+    want, _ = ref.ssd_scan_ref(x, Bm, Cm, am, dtm)
+    got = ops.ssd_scan(x, Bm, Cm, am, dtm, chunk=32)
+    rows.append({
+        "name": "kernel/ssd_chunk/pallas_interpret",
+        "allclose_err": f"{float(jnp.abs(got - want).max()):.1e}",
+        "vmem_kb": round(ssd_vmem(128, 8, 64, 64) / 1024, 1),
+    })
+    # swa attention
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 512, 64))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 512, 64))
+    ref_fn = jax.jit(lambda q, k, v: ref.swa_attention_ref(q, k, v, 128))
+    us_ref = time_fn(ref_fn, q, k, v)
+    rows.append({"name": "kernel/swa_attention/ref_jnp",
+                 "us_per_call": round(us_ref, 1)})
+    got = ops.swa_attention(q, k, v, window=128)
+    err = float(jnp.abs(got - ref_fn(q, k, v)).max())
+    # VMEM: q,kv,acc blocks f32
+    vmem = (128 * 64 + 2 * 128 * 64 + 128 * 64 + 128 * 128) * 4
+    rows.append({"name": "kernel/swa_attention/pallas_interpret",
+                 "allclose_err": f"{err:.1e}",
+                 "vmem_kb": round(vmem / 1024, 1)})
+    return rows

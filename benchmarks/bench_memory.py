@@ -1,0 +1,124 @@
+"""Figs. 6 & 7 — memory scalability: largest batch size and largest image
+dimension each strategy fits under the paper's two GPU budgets (RTX3090 =
+24 GB, RTX3080 = 10 GB), from the analytic memory model (Eqs. 3-16); plus
+the XLA-compiled temp-bytes cross-check on a reduced config (the measured
+stand-in for nvidia-smi).
+
+Paper expectation: Base < Ckp < {2PS, OverL} < {2PS-H, OverL-H}.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compiled_temp_bytes
+from repro.core import rowplan
+from repro.core.hybrid import auto_segments, make_strategy_apply
+from repro.models.cnn.resnet import resnet50_modules
+from repro.models.cnn.vgg import head_apply, init_vgg16, vgg16_modules
+
+GB = 1024 ** 3
+BUDGETS = {"rtx3090_24gb": 24 * GB, "rtx3080_10gb": 10 * GB}
+XI = 2 * GB  # kernels, grads, workspace (paper's xi)
+
+
+def _modules(arch, h):
+    if arch == "vgg16":
+        return vgg16_modules(1.0)
+    return resnet50_modules(1.0)
+
+
+def _largest_batch(arch, strategy, budget):
+    mods = _modules(arch, 224)
+    shape = (224, 224, 3)
+    if strategy.endswith("_h"):
+        # hybrid: segment-local depth -> apply solver per segment; approximate
+        # by solving with the base strategy on sqrt(L) shallower chains
+        inner = strategy[:-2]
+        segs = auto_segments(len(mods))
+        # per-segment N caps are much larger; model as inner strategy with
+        # extra checkpoint storage = sum of segment-input maps
+        shapes = rowplan.shape_chain(mods, shape)
+        ckpt_bytes = lambda b: sum(
+            b * h * w * c * 4 for (h, w, c) in
+            [shapes[a] for a, _ in segs])
+        lo, hi, best = 1, 4096, 0
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            r = rowplan.solve_n(mods, shape, mid,
+                                budget - XI - ckpt_bytes(mid), inner,
+                                n_max=64)
+            seg_feasible = r.feasible
+            if seg_feasible:
+                best, lo = mid, mid + 1
+            else:
+                hi = mid - 1
+        return best, r.n_rows if best else 0
+    b, n = rowplan.largest_batch(mods, shape, budget, strategy, xi=XI,
+                                 b_max=4096)
+    return b, n
+
+
+def run() -> List[dict]:
+    rows = []
+    for arch in ("vgg16", "resnet50"):
+        for budget_name, budget in BUDGETS.items():
+            base, _ = _largest_batch(arch, "base", budget)
+            for strat in ("base", "ckp", "twophase", "overlap",
+                          "twophase_h", "overlap_h"):
+                if strat == "ckp":
+                    # Chen et al.: sqrt(L) checkpoints keep only segment
+                    # inputs + one segment's activations
+                    mods = _modules(arch, 224)
+                    shape = (224, 224, 3)
+                    shapes = rowplan.shape_chain(mods, shape)
+                    segs = auto_segments(len(mods))
+                    per_b = sum(shapes[a][0] * shapes[a][1] * shapes[a][2]
+                                for a, _ in segs) * 4
+                    seg_act = max(
+                        sum(h * w * c for (h, w, c) in
+                            shapes[a + 1:bnd + 1]) * 4
+                        for a, bnd in segs)
+                    b = int((budget - XI) // (per_b + seg_act))
+                    n = 1
+                else:
+                    b, n = _largest_batch(arch, strat, budget)
+                rows.append({
+                    "name": f"fig6_batch/{arch}/{budget_name}/{strat}",
+                    "largest_batch": b, "n_rows": n,
+                    "vs_base": round(b / max(1, base), 2),
+                })
+    # Fig. 7: largest image dimension at batch 8
+    for arch in ("vgg16", "resnet50"):
+        budget = BUDGETS["rtx3090_24gb"]
+        for strat in ("base", "twophase", "overlap"):
+            if arch == "vgg16":
+                mk = lambda h: vgg16_modules(1.0)
+            else:
+                mk = lambda h: resnet50_modules(1.0)
+            h, n = rowplan.largest_image(mk, (224, 224, 3), 8, budget,
+                                         strat, xi=XI, h_max=3600)
+            rows.append({"name": f"fig7_imgdim/{arch}/{strat}",
+                         "largest_h": h, "n_rows": n})
+    # measured cross-check: compiled temp bytes, reduced VGG
+    image = 64
+    mods, params = init_vgg16(jax.random.PRNGKey(0), (image, image, 3),
+                              width_mult=0.5, n_classes=4, n_stages=3)
+    x = jax.ShapeDtypeStruct((8, image, image, 3), jnp.float32)
+    p_spec = jax.eval_shape(lambda: params)
+    from repro.core.twophase import max_valid_rows
+    n2ps = max_valid_rows(mods, image)
+    for strat, n in [("base", 1), ("ckp", 1), ("twophase", n2ps),
+                     ("overlap", 4), ("twophase_h", 3), ("overlap_h", 4)]:
+        trunk = make_strategy_apply(mods, image, strat, n)
+
+        def loss(p, x, trunk=trunk):
+            return jnp.sum(head_apply(p["head"], trunk(p["trunk"], x)) ** 2)
+
+        tb = compiled_temp_bytes(jax.grad(loss), p_spec, x)
+        rows.append({"name": f"measured_tempbytes/vgg16r/{strat}",
+                     "temp_mb": round(tb / 2**20, 1), "n_rows": n})
+    return rows

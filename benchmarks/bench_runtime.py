@@ -1,0 +1,45 @@
+"""Fig. 8 — runtime latency per training step for each strategy (reduced
+configs on CPU; the paper's relative-latency ordering is the claim under
+test: Base < Ckp < OverL < 2PS, hybrids highest)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core.hybrid import make_strategy_apply
+from repro.models.cnn.vgg import head_apply, init_vgg16
+
+IMAGE = 64
+BATCH = 8
+
+
+def run() -> List[dict]:
+    key = jax.random.PRNGKey(0)
+    mods, params = init_vgg16(key, (IMAGE, IMAGE, 3), width_mult=0.25,
+                              n_classes=10, n_stages=3)
+    x = jax.random.normal(key, (BATCH, IMAGE, IMAGE, 3))
+    rows = []
+    base_us = None
+    from repro.core.twophase import max_valid_rows
+    n2ps = max_valid_rows(mods, IMAGE)
+    for strat, n in [("base", 1), ("ckp", 1), ("overlap", 4),
+                     ("twophase", n2ps), ("overlap_h", 4),
+                     ("twophase_h", 3)]:
+        trunk = make_strategy_apply(mods, IMAGE, strat, n)
+
+        def loss(p, x, trunk=trunk):
+            return jnp.sum(head_apply(p["head"], trunk(p["trunk"], x)) ** 2)
+
+        fn = jax.jit(jax.grad(loss))
+        us = time_fn(fn, params, x)
+        if strat == "base":
+            base_us = us
+        rows.append({"name": f"fig8_runtime/vgg16r/{strat}",
+                     "us_per_call": round(us, 1),
+                     "slowdown_vs_base": round(us / base_us, 2),
+                     "n_rows": n})
+    return rows

@@ -1,0 +1,41 @@
+"""Beyond-paper: LR-CNN's row partitioning transplanted to the sequence
+axis of transformers — compiled temp bytes vs row_chunks for a reduced
+dense LM grad step (the Eq. 7 liveness effect on the attention/MLP
+activations)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.lm import model as LM
+
+
+def run() -> List[dict]:
+    base = get_reduced("llama3_2_3b")
+    S, B = 256, 4
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    rows = []
+    t0 = None
+    for rc, remat in [(1, "none"), (2, "rows"), (4, "rows"), (8, "rows")]:
+        cfg = type(base)(**{**base.__dict__, "row_chunks": rc,
+                            "remat": remat})
+        p_spec = jax.eval_shape(
+            lambda k: LM.init_lm(k, cfg), jax.random.PRNGKey(0))
+
+        def loss(p, t, cfg=cfg):
+            out, _ = LM.lm_loss(p, {"tokens": t, "labels": t}, cfg)
+            return out
+
+        c = jax.jit(jax.grad(loss)).lower(p_spec, toks).compile()
+        tb = c.memory_analysis().temp_size_in_bytes
+        if t0 is None:
+            t0 = tb
+        rows.append({"name": f"seqrow_temp/llama3r/chunks{rc}_{remat}",
+                     "temp_mb": round(tb / 2**20, 2),
+                     "vs_none": round(tb / t0, 3)})
+    return rows

@@ -1,0 +1,41 @@
+"""Table I — impact of checkpointing on the number of layers involved in
+row-centric update and the total number of rows (more = better memory
+sharing).  Hybrid variants (2PS-H/OverL-H) truncate the per-segment depth,
+admitting more rows per segment — the paper's Table I effect."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.hybrid import auto_segments, max_rows_per_segment
+from repro.core.twophase import max_valid_rows
+from repro.models.cnn.resnet import resnet50_modules
+from repro.models.cnn.vgg import vgg16_modules
+
+IMAGE = 224
+
+
+def run() -> List[dict]:
+    rows = []
+    for arch, mods in (("vgg16", vgg16_modules(1.0)),
+                       ("resnet50", resnet50_modules(1.0))):
+        # non-hybrid: one segment spanning the whole trunk
+        n_2ps = max_valid_rows(mods, IMAGE)
+        rows.append({"name": f"table1/{arch}/2PS",
+                     "layers_rowcentric": len(mods), "total_rows": n_2ps})
+        cap_ov = min(64, IMAGE // 8)
+        rows.append({"name": f"table1/{arch}/OverL",
+                     "layers_rowcentric": len(mods), "total_rows": cap_ov})
+        # hybrid: per-segment caps
+        segs = auto_segments(len(mods))
+        caps_tp = max_rows_per_segment(mods, IMAGE, segs, "twophase")
+        caps_ov = max_rows_per_segment(mods, IMAGE, segs, "overlap")
+        rows.append({"name": f"table1/{arch}/2PS-H",
+                     "layers_rowcentric": len(mods),
+                     "total_rows": sum(caps_tp),
+                     "n_segments": len(segs)})
+        rows.append({"name": f"table1/{arch}/OverL-H",
+                     "layers_rowcentric": len(mods),
+                     "total_rows": sum(min(c, 64) for c in caps_ov),
+                     "n_segments": len(segs)})
+    return rows

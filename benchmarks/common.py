@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock microseconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def compiled_temp_bytes(fn, *abstract_args) -> int:
+    c = jax.jit(fn).lower(*abstract_args).compile()
+    return c.memory_analysis().temp_size_in_bytes
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        name = r["name"]
+        us = r.get("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{name},{us},{derived}")

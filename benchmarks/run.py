@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig8]``
+Prints ``name,us_per_call,derived`` CSV rows (us empty for analytic rows).
+"""
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig6_fig7_memory", "benchmarks.bench_memory"),
+    ("fig8_runtime", "benchmarks.bench_runtime"),
+    ("fig9_fig10_granularity", "benchmarks.bench_granularity"),
+    ("table1_checkpointing", "benchmarks.bench_table1"),
+    ("fig11_convergence", "benchmarks.bench_convergence"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, modname in MODULES:
+        if args.only and args.only not in tag:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+            emit(rows)
+            print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"# {tag} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,46 @@
+"""Example 4: production-mesh dry-run + roofline for one (arch, shape).
+
+Lowers the real multi-pod step on 512 placeholder devices and prints the
+three roofline terms.  (The full 10x4x2 sweep is
+``python -m repro.launch.dryrun``.)
+
+  PYTHONPATH=src python examples/dryrun_roofline.py --arch gemma3_4b \
+      --shape long_500k
+"""
+
+# Must precede ANY jax import (device count locks at first init).
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_4b")
+    ap.add_argument("--shape", default="long_500k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_one
+    rec = run_one(args.arch, args.shape, args.multi_pod, fsdp=False,
+                  out_dir="")
+    if rec["status"] != "ok":
+        print(rec)
+        raise SystemExit(rec["status"] != "skipped")
+    a = rec["analytic"]
+    print(f"\n{args.arch} x {args.shape} x {rec['mesh']}")
+    print(f"  t_compute    = {a['t_compute_s']*1e3:9.3f} ms")
+    print(f"  t_memory     = {a['t_memory_s']*1e3:9.3f} ms")
+    print(f"  t_collective = {a['t_collective_s']*1e3:9.3f} ms")
+    print(f"  bottleneck   = {a['bottleneck']}")
+    print(f"  HBM/chip: args {rec['hlo_arg_bytes_per_chip']/2**30:.2f} GiB, "
+          f"temp {rec['hlo_temp_bytes_per_chip']/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Batched serving example: prefill a batch of prompts through a reduced
+gemma3-family model (sliding-window local + global layers), then decode
+greedily with the mixed KV cache (ring buffers for local layers, full
+cache for global layers) — the decode_32k serve_step in miniature.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.lm import model as LM
+
+BATCH, PROMPT, GEN = 4, 48, 24
+
+
+def main():
+    cfg = get_reduced("gemma3_4b")
+    print(f"arch={cfg.name} layers={cfg.layer_kinds()} "
+          f"window={cfg.sliding_window}")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, PROMPT)),
+                         jnp.int32)
+
+    prefill = jax.jit(lambda p, b: LM.lm_prefill(p, b, cfg, PROMPT + GEN))
+    decode = jax.jit(lambda p, t, c: LM.lm_decode(p, t, c, cfg))
+
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": tokens})
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    print(f"prefill({BATCH}x{PROMPT}): {(time.time()-t0)*1e3:.1f} ms")
+
+    # verify the ring-buffer local cache really is window-bounded
+    local_lens = [c["k"].shape[2] for seg in caches for c in seg
+                  if "ring" in c]
+    print("per-layer cache lengths:", local_lens,
+          f"(local layers capped at window={cfg.sliding_window})")
+
+    out = [tok]
+    t0 = time.time()
+    for _ in range(GEN - 1):
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    ms = (time.time() - t0) / (GEN - 1) * 1e3
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"decode: {ms:.2f} ms/token (batch {BATCH})")
+    for b in range(BATCH):
+        print(f"  request {b}: {gen[b][:12].tolist()} ...")
+    assert gen.shape == (BATCH, GEN)
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

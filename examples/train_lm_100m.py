@@ -1,0 +1,89 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the row-centric activation policy (sequence-chunked remat + chunked
+CE head), on the synthetic pipeline.
+
+Default invocation trains a ~110M-param xLSTM-125M-family model (the
+smallest assigned arch) at seq 256 for 300 steps:
+
+  PYTHONPATH=src python examples/train_lm_100m.py            # full run
+  PYTHONPATH=src python examples/train_lm_100m.py --steps 20 # smoke
+
+Any assigned arch works via --arch (reduced variants with --preset
+reduced).
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import store
+from repro.data.pipeline import TokenDataset, TokenDatasetConfig
+from repro.launch.steps import make_train_step
+from repro.models.lm import model as LM
+from repro.models.lm.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--out", default="experiments/train_100m")
+    args = ap.parse_args()
+
+    if args.arch:
+        from repro.configs import get_config
+        cfg = dataclasses.replace(get_config(args.arch), dtype="float32",
+                                  row_chunks=4)
+    else:
+        # ~100M-param dense llama-family model (fast enough for CPU; swap
+        # --arch xlstm_125m for the assigned SSM geometry on real HW)
+        cfg = ModelConfig(
+            name="dense-100m", family="dense", n_layers=12, d_model=640,
+            n_heads=10, n_kv_heads=5, d_ff=1792, vocab=50304,
+            tie_embeddings=True, dtype="float32", row_chunks=4,
+            remat="rows")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M seq={args.seq} "
+          f"batch={args.batch} steps={args.steps}")
+
+    state = {"params": params, "opt": adamw_init(params)}
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)),
+                      donate_argnums=(0,))
+    ds = TokenDataset(TokenDatasetConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                         batch=args.batch, seed=0,
+                                         n_gram=1, noise_p=0.05))
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        hb = ds.batch_at(i)
+        batch = {"tokens": jnp.asarray(hb["tokens"]),
+                 "labels": jnp.asarray(hb["labels"])}
+        state, m = step_fn(state, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            loss = float(m["loss"])
+            first = first if first is not None else loss
+            dt = time.time() - t0
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"({dt:.0f}s, {dt/max(1,i+1)*1e3:.0f} ms/step)")
+    final = float(m["loss"])
+    print(f"loss {first:.3f} -> {final:.3f} "
+          f"({'LEARNED' if final < first - 0.5 else 'check lr/steps'})")
+    store.save(args.out, args.steps, state["params"],
+               extra={"arch": cfg.name, "final_loss": final})
+    print(f"checkpoint saved to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

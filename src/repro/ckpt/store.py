@@ -1,0 +1,79 @@
+"""Model/optimizer checkpointing: flat-key npz store with step metadata.
+
+Pytrees are flattened with path-derived keys, saved host-local (one process
+in this container; per-host shards in a real pod would write their addressable
+slices — noted in DESIGN.md).  Restore reproduces the exact tree structure
+given a template pytree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, params: Any,
+         opt_state: Optional[Any] = None, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}")
+    np.savez(path + ".params.npz", **_flatten(params))
+    if opt_state is not None:
+        np.savez(path + ".opt.npz", **_flatten(opt_state))
+    meta = {"step": step, **(extra or {})}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    # update "latest" pointer
+    with open(os.path.join(directory, "latest.json"), "w") as f:
+        json.dump({"step": step}, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "latest.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)["step"]
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None,
+            kind: str = "params"):
+    """Restore a pytree with the template's structure and dtypes."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.{kind}.npz")
+    data = np.load(path)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    flat, tdef = leaves_with_path
+    out = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def restore_meta(directory: str, step: Optional[int] = None) -> dict:
+    if step is None:
+        step = latest_step(directory)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,46 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+CNN benchmarks).  Every config cites its source in the module docstring.
+
+``get_config(name)`` returns the full-size ModelConfig; ``get_reduced(name)``
+returns the smoke-test variant (<=2 layers, d_model<=512, <=4 experts) of
+the same family.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+_ARCHS = [
+    "qwen3_moe_235b_a22b",
+    "llava_next_34b",
+    "qwen1_5_110b",
+    "xlstm_125m",
+    "deepseek_moe_16b",
+    "llama3_2_3b",
+    "gemma3_4b",
+    "zamba2_7b",
+    "seamless_m4t_medium",
+    "qwen1_5_4b",
+]
+
+
+def canonical(name: str) -> str:
+    key = name.replace("-", "_").replace(".", "_")
+    if key in _ARCHS:
+        return key
+    raise KeyError(f"unknown arch {name!r}; known: {list_configs()}")
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.reduced()
+
+
+def list_configs() -> List[str]:
+    return list(_ARCHS)

@@ -1,0 +1,30 @@
+"""VGG-16 [Simonyan & Zisserman, ICLR'15] — the paper's own benchmark.
+
+Row-centric CNN training config: strategy/granularity chosen by the
+rowplan solver against the memory budget (the paper's RTX3090 = 24 GB /
+RTX3080 = 10 GB scenarios are reproduced in benchmarks/).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    arch: str              # vgg16 | resnet50
+    image: int = 224
+    channels: int = 3
+    n_classes: int = 10
+    batch: int = 32
+    width_mult: float = 1.0
+    strategy: str = "twophase_h"   # base|ckp|overlap|twophase|overlap_h|twophase_h
+    n_rows: int = 8
+    budget_gb: float = 24.0
+
+
+CONFIG = CNNConfig(name="vgg16", arch="vgg16")
+
+
+def reduced():
+    return CNNConfig(name="vgg16-reduced", arch="vgg16", image=64,
+                     width_mult=0.125, batch=2, n_rows=2,
+                     strategy="twophase")

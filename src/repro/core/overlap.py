@@ -1,0 +1,166 @@
+"""OverL — overlapping row partitioning (LR-CNN Sec. IV-B).
+
+Each row owns a disjoint interval of the *final* activation's rows and is
+given the full receptive-field closure of its interval at every level
+(Eq. 15 halo, replicated).  Rows are completely independent: no coordination
+during FP, per-row recomputation during BP (``jax.custom_vjp``), so the
+framework-level liveness of intermediate feature maps is bounded by one
+row's working set instead of the whole network's (Eq. 7/8 vs Eq. 3).
+
+Exactness-by-construction: output ownership is disjoint and every output
+element is computed from the same inputs as the column-centric reference,
+so both the forward value and the accumulated gradients are mathematically
+identical to column-centric training (see DESIGN.md §2).  The paper's
+"average the redundant gradients" correction is subsumed.
+
+FP and BP granularities may differ (paper §III-C: ``N_BP >= N_FP``): the
+forward pass uses ``n_rows_fp`` rows and the backward pass re-partitions
+into ``n_rows_bp`` rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.convmath import Interval, split_even
+from repro.models.cnn.layers import trunk_heights, trunk_in_intervals
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """Static per-row interval chains for a trunk."""
+
+    h0: int
+    heights: Tuple[int, ...]
+    row_ivs: Tuple[Interval, ...]              # final-level ownership
+    chains: Tuple[Tuple[Interval, ...], ...]   # per row: ivs at levels 0..L
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_ivs)
+
+    def overlap_rows_level0(self) -> List[int]:
+        """Replicated input rows per seam (Eq. 15's o_r^0, measured)."""
+        out = []
+        for r in range(1, self.n_rows):
+            prev_end = self.chains[r - 1][0][1]
+            cur_start = self.chains[r][0][0]
+            out.append(max(0, prev_end - cur_start))
+        return out
+
+
+def plan_overlap(modules: Sequence, h0: int, n_rows: int) -> OverlapPlan:
+    hs = trunk_heights(modules, h0)
+    row_ivs = split_even(hs[-1], n_rows)
+    chains = tuple(
+        tuple(trunk_in_intervals(modules, h0, iv)) for iv in row_ivs
+    )
+    return OverlapPlan(h0, tuple(hs), tuple(row_ivs), chains)
+
+
+def _run_row(modules, params, x_slice, chain, heights):
+    y = x_slice
+    for l, (m, p) in enumerate(zip(modules, params)):
+        y = m.apply_row(p, y, chain[l], heights[l], chain[l + 1])
+    return y
+
+
+def overlap_forward(modules: Sequence, params, x, plan: OverlapPlan,
+                    serialize: bool = True):
+    """Row-by-row forward; concatenation of disjoint final rows.
+
+    ``serialize=True`` threads an ``optimization_barrier`` between rows:
+    OverL rows are data-independent, so without it XLA's scheduler may
+    interleave them, keeping every row's working set live at once and
+    destroying the Eq. (7) liveness bound (the paper's GPU runner schedules
+    rows one-by-one for the same reason).  Set False to let rows run
+    concurrently when memory is plentiful and latency matters (the paper's
+    high-configured-device regime)."""
+    outs = []
+    p_r = params
+    for r in range(plan.n_rows):
+        chain = plan.chains[r]
+        a, b = chain[0]
+        if serialize and outs:
+            p_r, prev = lax.optimization_barrier((params, outs[-1]))
+            outs[-1] = prev
+        xr = lax.slice_in_dim(x, a, b, axis=1)
+        outs.append(_run_row(modules, p_r, xr, chain, plan.heights))
+    return jnp.concatenate(outs, axis=1)
+
+
+def make_overlap_apply(modules: Sequence, h0: int, n_rows_fp: int,
+                       n_rows_bp: int | None = None):
+    """Returns ``apply(params, x) -> z_L`` with row-centric custom VJP."""
+    n_rows_bp = n_rows_bp or n_rows_fp
+    plan_fp = plan_overlap(modules, h0, n_rows_fp)
+    plan_bp = plan_overlap(modules, h0, n_rows_bp)
+
+    @jax.custom_vjp
+    def apply(params, x):
+        return overlap_forward(modules, params, x, plan_fp)
+
+    def fwd(params, x):
+        return overlap_forward(modules, params, x, plan_fp), (params, x)
+
+    def bwd(res, g):
+        params, x = res
+        dparams = jax.tree.map(jnp.zeros_like, params)
+        dx = jnp.zeros_like(x)
+        p_r = params
+        for r in range(plan_bp.n_rows):
+            chain = plan_bp.chains[r]
+            a, b = chain[0]
+            if r > 0:  # serialize rows (see overlap_forward)
+                p_r, dparams, dx = lax.optimization_barrier(
+                    (params, dparams, dx))
+            xr = lax.slice_in_dim(x, a, b, axis=1)
+
+            def f_r(p, xs, chain=chain):
+                return _run_row(modules, p, xs, chain, plan_bp.heights)
+
+            _, vjp = jax.vjp(f_r, p_r, xr)
+            os_, oe = plan_bp.row_ivs[r]
+            dp, dxr = vjp(lax.slice_in_dim(g, os_, oe, axis=1))
+            dparams = jax.tree.map(jnp.add, dparams, dp)
+            dx = dx.at[:, a:b].add(dxr)
+        return dparams, dx
+
+    apply.defvjp(fwd, bwd)
+    return apply
+
+
+def make_column_apply(modules: Sequence):
+    """Column-centric reference (the paper's Base)."""
+
+    def apply(params, x):
+        for m, p in zip(modules, params):
+            x = m.apply(p, x)
+        return x
+
+    return apply
+
+
+def make_splitcnn_apply(modules: Sequence, h0: int, n_rows: int):
+    """Split-CNN [22]-style broken baseline for the Fig. 11 ablation: rows
+    are processed independently with *closed* padding at seams and no halo —
+    exhibits the paper's "feature loss"/"padding redundancy" pathologies.
+    Output height differs from the reference; callers must use an H-agnostic
+    head (e.g. global average pooling)."""
+
+    def apply(params, x):
+        slices = split_even(h0, n_rows)
+        outs = []
+        for a, b in slices:
+            y = lax.slice_in_dim(x, a, b, axis=1)
+            for m, p in zip(modules, params):
+                y = m.apply(p, y)  # full padding everywhere == seam padding
+            outs.append(y)
+        return jnp.concatenate(outs, axis=1)
+
+    return apply

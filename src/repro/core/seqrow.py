@@ -1,0 +1,99 @@
+"""Row-centric execution transplanted to sequence models (DESIGN.md §4).
+
+LR-CNN's core = partition the spatial axis of activations, schedule compute
+block-wise, recompute per block in BP, and handle block seams either by
+carrying boundary data (2PS) or replicating a halo (OverL).  For sequence
+models the spatial axis is the *sequence* axis:
+
+* per-token layers (MLP, routers, norms): halo 0 — :func:`chunked_apply`
+  (pure activation-memory win, exact).
+* sliding-window attention (window w): weak dependency of extent w —
+  :func:`swa_overlap_chunks` (OverL: replicated w-token KV halo, chunks
+  independent) — gemma3's local layers.
+* recurrent scans (Mamba2/sLSTM): the carried state *is* the 2PS boundary
+  cache — :func:`carry_scan_remat` (sequential chunks, exact, no
+  redundancy).
+* full/global attention and the LM head keep column semantics — the same
+  carve-out the paper makes for FC layers.
+
+Each helper wraps its chunk body in ``jax.checkpoint`` so BP recomputes one
+chunk at a time — the BP half of Alg. 1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _split_chunks(x, n_chunks: int, axis: int):
+    s = x.shape[axis]
+    assert s % n_chunks == 0, f"seq {s} not divisible by {n_chunks} chunks"
+    c = s // n_chunks
+    newshape = x.shape[:axis] + (n_chunks, c) + x.shape[axis + 1:]
+    return jnp.reshape(x, newshape)
+
+
+def chunked_apply(fn: Callable, x, n_chunks: int, axis: int = 1):
+    """Apply a per-token ``fn`` over sequence chunks with per-chunk remat.
+
+    Equivalent to ``fn(x)`` for any fn that acts independently per position
+    along ``axis``; peak activation liveness inside fn drops by ~n_chunks
+    (Eq. 7 with halo 0)."""
+    if n_chunks <= 1 or x.shape[axis] % n_chunks:
+        return fn(x)
+    xc = _split_chunks(x, n_chunks, axis)
+    xc = jnp.moveaxis(xc, axis, 0)  # (n_chunks, ..., c, ...)
+    yc = lax.map(jax.checkpoint(fn), xc)
+    yc = jnp.moveaxis(yc, 0, axis)
+    return jnp.reshape(yc, x.shape[:axis] + (x.shape[axis],) + yc.shape[axis + 2:])
+
+
+def carry_scan_remat(body: Callable, carry_init, xs, n_chunks: int,
+                     axis: int = 1):
+    """2PS along the sequence: ``body(carry, chunk) -> (carry, out)`` run
+    over ``n_chunks`` chunks with remat.  The carry (recurrent state /
+    boundary KV) plays the role of the 2PS boundary cache: computed once,
+    handed to the next row, re-used in BP via scan's structured transpose.
+    """
+    xc = jnp.moveaxis(_split_chunks(xs, n_chunks, axis), axis, 0)
+    carry, yc = lax.scan(jax.checkpoint(body), carry_init, xc)
+    yc = jnp.moveaxis(yc, 0, axis)
+    out = jnp.reshape(yc, xs.shape[:axis] + (xs.shape[axis],) + yc.shape[axis + 2:])
+    return carry, out
+
+
+def swa_overlap_chunks(attend: Callable, q, k, v, window: int,
+                       n_chunks: int):
+    """OverL along the sequence for causal sliding-window attention.
+
+    ``attend(qc, kc, vc, q_offset, k_offset)`` computes attention of a query
+    chunk against a key/value slab with causal+window masking done by the
+    callee from the global offsets.  Each query chunk ``[a, b)`` reads the
+    replicated halo ``[a - window, b)`` of K/V — chunks are fully
+    independent (no cross-chunk coordination), the LR-CNN OverL pattern.
+
+    q, k, v: (B, S, H, D) with the same S.  Returns (B, S, Hq, D).
+    """
+    B, S, Hq, D = q.shape
+    assert S % n_chunks == 0
+    c = S // n_chunks
+    halo = min(window, S)  # replicated lookback
+    # left-pad K/V so every chunk can take a static-size slab
+    pad = [(0, 0), (halo, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+    outs = []
+    for i in range(n_chunks):
+        a = i * c
+        qc = lax.slice_in_dim(q, a, a + c, axis=1)
+        kc = lax.slice_in_dim(kp, a, a + c + halo, axis=1)
+        vc = lax.slice_in_dim(vp, a, a + c + halo, axis=1)
+        body = jax.checkpoint(
+            functools.partial(attend, q_offset=a, k_offset=a - halo))
+        outs.append(body(qc, kc, vc))
+    return jnp.concatenate(outs, axis=1)

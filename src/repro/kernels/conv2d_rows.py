@@ -1,0 +1,124 @@
+"""Row-block direct convolution — LR-CNN's row partitioning as VMEM tiling.
+
+TPU adaptation (DESIGN.md §3): the paper partitions feature maps into rows
+so limited memory is reused across rows; on TPU the scarce memory is VMEM,
+so the same idea becomes the BlockSpec tiling of a Pallas kernel.  The grid
+walks (batch, output-row-blocks); each step fetches the input row-block
+*plus its receptive-field halo* into VMEM — OverL semantics: replicated
+reads, fully independent blocks (2PS's sequential cache maps poorly onto a
+systolic grid; see DESIGN.md).
+
+Halo mechanics: overlapping input blocks are not expressible with a single
+blocked index_map, so the kernel takes the SAME input array through TWO
+in_specs whose index maps point at consecutive row blocks ("dual-block
+fetch"); the kernel concatenates them and slices the halo it needs.  Valid
+whenever halo (k - s) <= block_h * s, which the wrapper enforces.
+
+The MUL-SUM accumulation runs as kh*kw dot_generals of shape
+(block_h * W_out, Cin) x (Cin, Cout) — MXU-shaped matmuls; W_out*Cout and
+Cin should be multiples of (8,128) for full MXU utilisation (the wrapper's
+``good_tiling`` reports this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x0_ref, x1_ref, w_ref, o_ref, *, kh, kw, stride, block_h,
+                 w_out):
+    """One (batch, row-block) grid step.
+
+    x0/x1: (1, block_h*stride, W_in, Cin) consecutive input row blocks.
+    w: (kh, kw, Cin, Cout).  o: (1, block_h, W_out, Cout).
+    """
+    x = jnp.concatenate([x0_ref[0], x1_ref[0]], axis=0)
+    cin = x.shape[-1]
+    cout = w_ref.shape[-1]
+    acc = jnp.zeros((block_h, w_out, cout), jnp.float32)
+    for ki in range(kh):
+        for kj in range(kw):
+            # rows ki, ki+s, ..., ki+(block_h-1)*s ; cols kj .. kj+w_out*s
+            rows = jax.lax.slice(
+                x, (ki, kj, 0),
+                (ki + (block_h - 1) * stride + 1,
+                 kj + (w_out - 1) * stride + 1, cin),
+                (stride, stride, 1))                    # (block_h, w_out, Cin)
+            wk = w_ref[ki, kj]                          # (Cin, Cout)
+            acc += jax.lax.dot_general(
+                rows.reshape(block_h * w_out, cin), wk,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(block_h, w_out, cout)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv2d_rows(x, w, *, stride: int = 1, padding: int = 0,
+                block_h: int = 8, interpret: bool = True):
+    """NHWC x HWIO -> NHWC convolution with row-block VMEM tiling.
+
+    ``interpret=True`` executes on CPU for validation; on real TPU pass
+    interpret=False.
+    """
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
+                        (0, 0)))
+        B, H, W, Cin = x.shape
+    H_out = (H - kh) // stride + 1
+    W_out = (W - kw) // stride + 1
+    block_h = min(block_h, H_out)
+    n_blocks = -(-H_out // block_h)
+    # pad H so every block (and its +1 neighbour) exists
+    in_block_h = block_h * stride
+    need_h = (n_blocks + 1) * in_block_h
+    if need_h > H:
+        x = jnp.pad(x, ((0, 0), (0, need_h - H), (0, 0), (0, 0)))
+    halo = kh - stride
+    assert halo <= in_block_h, (
+        f"halo {halo} exceeds row block {in_block_h}; increase block_h")
+    pad_out = n_blocks * block_h - H_out
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, stride=stride,
+                               block_h=block_h, w_out=W_out)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, in_block_h, x.shape[2], Cin),
+                         lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, in_block_h, x.shape[2], Cin),
+                         lambda b, i: (b, i + 1, 0, 0)),
+            pl.BlockSpec((kh, kw, Cin, Cout), lambda b, i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, W_out, Cout),
+                               lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_blocks * block_h, W_out, Cout),
+                                       x.dtype),
+        interpret=interpret,
+    )(x, x, w)
+    if pad_out:
+        out = out[:, :H_out]
+    return out
+
+
+def vmem_bytes(block_h: int, stride: int, w_in: int, cin: int, w_out: int,
+               cout: int, kh: int, kw: int, dtype_bytes: int = 4) -> int:
+    """Working-set estimate for the BlockSpec above (2 input blocks +
+    weights + acc + out block)."""
+    in_blk = block_h * stride * w_in * cin * dtype_bytes
+    return (2 * in_blk
+            + kh * kw * cin * cout * dtype_bytes
+            + block_h * w_out * cout * 4        # fp32 acc
+            + block_h * w_out * cout * dtype_bytes)
+
+
+def good_tiling(cin: int, cout: int) -> bool:
+    """MXU alignment check: contraction and output minor dims should be
+    multiples of (8, 128)."""
+    return cin % 8 == 0 and cout % 128 == 0

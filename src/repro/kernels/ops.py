@@ -1,0 +1,35 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+Pallas interpreter runs the kernel body in Python) — the TPU lowering path
+is identical modulo the flag.  ``INTERPRET`` flips globally for a real TPU
+deployment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.conv2d_rows import conv2d_rows as _conv2d_rows
+from repro.kernels.ssd_chunk import ssd_scan as _ssd
+from repro.kernels.swa_attention import swa_attention as _swa
+
+INTERPRET = True  # set False on real TPU
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "block_h"))
+def conv2d(x, w, stride: int = 1, padding: int = 0, block_h: int = 8):
+    return _conv2d_rows(x, w, stride=stride, padding=padding,
+                        block_h=block_h, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk"))
+def swa_attention(q, k, v, window: int, bq: int = 128, bk: int = 128):
+    return _swa(q, k, v, window=window, bq=bq, bk=bk, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, B, C, a, dt, chunk: int = 128):
+    return _ssd(x, B, C, a, dt, chunk=chunk, interpret=INTERPRET)

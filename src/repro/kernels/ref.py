@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, stride: int = 1, padding: int = 0):
+    """NHWC x HWIO -> NHWC, symmetric padding."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def swa_attention_ref(q, k, v, window: int):
+    """Causal sliding-window attention.  q/k/v: (B, H, S, D)."""
+    B, H, S, D = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D)
+    qp = jnp.arange(S)
+    ok = (qp[None, :] <= qp[:, None])
+    if window > 0:
+        ok &= qp[None, :] > (qp[:, None] - window)
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, B, C, a, dt):
+    """Sequential reference for the Mamba2 SSD recurrence.
+
+    x: (Bt, S, H, P); B/C: (Bt, S, N); a/dt: (Bt, S, H).
+    h_t = a_t h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = C_t · h_t.
+    Returns (y: (Bt, S, H, P), h_final: (Bt, H, P, N))."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, Bt_, Ct, at, dtt = inp
+        h = h * at[..., None, None] \
+            + jnp.einsum("bhp,bn,bh->bhpn", xt, Bt_, dtt)
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, P, N), x.dtype)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(B, 1, 0),
+          jnp.moveaxis(C, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(dt, 1, 0))
+    h, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,99 @@
+"""Mamba2 SSD chunked-scan kernel — the SSM-family hot spot, Pallas/TPU.
+
+LR-CNN mapping: the chunk axis is the sequence "row"; the carried state
+h (H, P, N) is the 2PS boundary cache, living in VMEM scratch across the
+sequential chunk grid dimension (TPU grids iterate the last axis
+sequentially, so the scratch persists chunk-to-chunk — a hardware-native
+2PS carry).
+
+Per chunk (all in VMEM):
+  L_t   = cumsum(log a_t)                      (c, H)
+  intra: y_t += C_t . Σ_{s<=t} e^{L_t-L_s} dt_s B_s x_s   — (c, c) decay
+         matrix x (c, c) CB Gram matrix, masked causal; dot on the MXU
+  carry: y_t += C_t · h_in · e^{L_t}
+  state: h_out = h_in·e^{L_c} + Σ_s x̃_s ⊗ B_s e^{L_c - L_s}
+
+Working set ~ c²·H + c·(HP + 2N) floats; c=128, H=8, P=64, N=64 ->
+~1.3 MB: comfortably sub-16MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, a_ref, dt_ref, o_ref, h_scr, *,
+                n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)      # (c, H, P)
+    B = b_ref[0].astype(jnp.float32)      # (c, N)
+    C = c_ref[0].astype(jnp.float32)      # (c, N)
+    a = a_ref[0].astype(jnp.float32)      # (c, H)
+    dt = dt_ref[0].astype(jnp.float32)    # (c, H)
+    c = x.shape[0]
+
+    la = jnp.log(a + 1e-12)
+    cum = jnp.cumsum(la, axis=0)                        # (c, H)
+    diff = cum[:, None, :] - cum[None, :, :]            # (c, c, H)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    w = jnp.where(mask[..., None], jnp.exp(diff), 0.0)  # (c, c, H)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    scores = cb[..., None] * w                          # (t, s, H)
+    xdt = x * dt[..., None]                             # (s, H, P)
+    y = jnp.einsum("tsh,shp->thp", scores, xdt)
+    # carried-state contribution
+    h_in = h_scr[...]                                   # (H, P, N)
+    decay_t = jnp.exp(cum)                              # (t, H)
+    y = y + jnp.einsum("tn,hpn,th->thp", C, h_in, decay_t)
+    # state update
+    tail = jnp.exp(cum[-1:, :] - cum)                   # (s, H)
+    h_scr[...] = h_in * jnp.exp(cum[-1, :])[:, None, None] \
+        + jnp.einsum("shp,sn,sh->hpn", xdt, B, tail)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan(x, B, C, a, dt, *, chunk: int = 128, interpret: bool = True):
+    """x: (Bt, S, H, P); B/C: (Bt, S, N); a/dt: (Bt, S, H) -> y like x.
+
+    Exact SSD recurrence  h_t = a_t h_{t-1} + dt_t·x_t⊗B_t ;  y_t = C_t·h_t.
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bt, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, H, P), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, B, C, a, dt)
+
+
+def vmem_bytes(chunk: int, h: int, p: int, n: int) -> int:
+    return 4 * (chunk * chunk * (h + 1)        # w + cb
+                + 2 * chunk * h * p            # x, y
+                + 2 * chunk * n + 2 * chunk * h
+                + h * p * n)                   # state scratch

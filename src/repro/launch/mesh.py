@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e pods; 256 chips/pod).
+
+Factory functions only — importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; smoke tests see
+the single real CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real local devices (CPU smoke / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, max(1, min(model, n // data))),
+                         ("data", "model"))
+
+
+# Hardware constants for the roofline analysis (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12      # per chip, FLOP/s
+HBM_BW = 819e9                # per chip, bytes/s
+ICI_BW = 50e9                 # per link, bytes/s
+VMEM_BYTES = 128 * 2**20      # v5e VMEM (~128 MiB usable across cores); the
+                              # per-kernel working-set target is ~16 MiB

@@ -1,0 +1,79 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens
+with the KV cache / SSM state.
+
+PYTHONPATH=src python -m repro.launch.serve --arch gemma3_4b \
+    --preset reduced --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_reduced
+    from repro.models.lm import encdec as ED
+    from repro.models.lm import model as LM
+
+    cfg = get_reduced(args.arch) if args.preset == "reduced" \
+        else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+
+    rng = np.random.default_rng(args.seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+
+    if cfg.family == "encdec":
+        params = ED.init_encdec(key, cfg)
+        batch = {"frames": jnp.asarray(
+            rng.normal(0, 1, (B, P, cfg.d_model)).astype(np.float32)),
+            "tokens": tokens}
+        prefill = jax.jit(lambda p, b: ED.encdec_prefill(p, b, cfg, max_len))
+        decode = jax.jit(lambda p, t, c: ED.encdec_decode(p, t, c, cfg))
+    else:
+        params = LM.init_lm(key, cfg)
+        batch = {"tokens": tokens}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.asarray(rng.normal(
+                0, 1, (B, cfg.n_frontend_tokens, 1152)).astype(np.float32))
+        prefill = jax.jit(lambda p, b: LM.lm_prefill(p, b, cfg, max_len))
+        decode = jax.jit(lambda p, t, c: LM.lm_decode(p, t, c, cfg))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+    out = [tok]
+    t0 = time.time()
+    for _ in range(G - 1):
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={P} generated={gen.shape[1]}")
+    print(f"prefill {t_prefill*1e3:.1f} ms; decode "
+          f"{t_decode/max(1, G-1)*1e3:.2f} ms/token")
+    print("sample tokens:", np.asarray(gen[0][:16]))
+    assert bool(jnp.all(jnp.isfinite(logits))), "non-finite logits"
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

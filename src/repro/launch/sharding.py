@@ -1,0 +1,223 @@
+"""Name-based sharding rules: logical activation axes + regex param rules.
+
+Two mechanisms:
+
+* **Logical activation constraints** — model code calls
+  ``lc(x, "batch", None, "tp")``; an active :class:`ShardCtx` maps logical
+  names to physical mesh axes and applies ``with_sharding_constraint``.
+  With no active context (CPU smoke tests) it is a no-op, so the same model
+  code runs everywhere.
+
+* **Param rules** — ``(regex, PartitionSpec-of-logical-names)`` pairs
+  resolved against the flattened param-path tree to build ``in_shardings``
+  for jit (and optimizer state, which shards like its param).
+
+Logical axis vocabulary:
+  batch  -> ("pod", "data") (multi-pod) | ("data",)
+  fsdp   -> ("data",) when FSDP is on, else None
+  tp     -> ("model",)
+  expert -> ("model",)  (expert parallelism shares the model axis)
+  seq    -> ("data",) only for length-sharded long-context decode
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Optional["ShardCtx"]:
+    return getattr(_STATE, "ctx", None)
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Mesh
+    logical: dict  # logical name -> physical axis name(s) or None
+
+    def resolve(self, names: Sequence) -> P:
+        phys = []
+        for n in names:
+            if n is None:
+                phys.append(None)
+            elif isinstance(n, (tuple, list)):
+                merged: Tuple = ()
+                for sub in n:
+                    m = self.logical.get(sub)
+                    if m:
+                        merged += m if isinstance(m, tuple) else (m,)
+                phys.append(merged if merged else None)
+            else:
+                phys.append(self.logical.get(n))
+        return P(*phys)
+
+    def sharding(self, names: Sequence) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(names))
+
+
+def make_ctx(mesh: Mesh, *, fsdp: bool = False, seq_sharded: bool = False,
+             dp_only: bool = False) -> ShardCtx:
+    axes = mesh.axis_names
+    if dp_only:
+        # pure data-parallel/FSDP layout: batch over every axis, params
+        # 2D-sharded over (data, model).  Right for small-d models where
+        # 16-way TP is collective-bound (see EXPERIMENTS.md §Perf).
+        batch = tuple(a for a in ("pod", "data", "model") if a in axes)
+        shard2d = tuple(a for a in ("data", "model") if a in axes)
+        logical = {
+            "batch": batch if batch else None,
+            "tp": None,
+            "expert": None,
+            "fsdp": shard2d if fsdp else None,
+            "seq": ("data",) if (seq_sharded and "data" in axes) else None,
+        }
+        return ShardCtx(mesh, logical)
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    logical = {
+        "batch": batch if batch else None,
+        "tp": ("model",) if "model" in axes else None,
+        "expert": ("model",) if "model" in axes else None,
+        "fsdp": ("data",) if (fsdp and "data" in axes) else None,
+        "seq": ("data",) if (seq_sharded and "data" in axes) else None,
+    }
+    return ShardCtx(mesh, logical)
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: Optional[ShardCtx]):
+    prev = _current()
+    _STATE.ctx = ctx
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for e in entry:
+        n *= mesh.shape[e]
+    return n
+
+
+def filter_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (replicate instead) —
+    graceful fallback for awkward head/expert counts (e.g. 20 heads on a
+    16-way model axis).  Noted per-arch in EXPERIMENTS.md."""
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is not None and shape[d] % _axes_size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def lc(x, *names):
+    """Logical with_sharding_constraint; no-op without an active context."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    spec = filter_spec(ctx.resolve(names), x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Param rules
+# ---------------------------------------------------------------------------
+
+Rule = Tuple[str, Tuple]  # (path regex, logical names per dim)
+
+# Default rules for the LM substrate's parameter tree naming convention.
+# A rule's value may be a single logical-name tuple or a LIST of candidate
+# tuples: the first candidate that keeps at least one sharded dim after the
+# divisibility filter wins (fallback for awkward head counts — e.g. 24 q
+# heads on a 16-way model axis fall back to sharding the d_model dim,
+# Megatron row-parallel style).
+LM_RULES: Tuple[Rule, ...] = (
+    (r"embed/table", ("tp", "fsdp")),            # (vocab, d)
+    (r"unembed/w", ("fsdp", "tp")),              # (d, vocab)
+    (r".*attn/wq", [("fsdp", "tp", None),        # (d, H, hd): heads first,
+                    ("tp", None, None)]),        # else row-parallel over d
+    (r".*attn/wk", [("fsdp", "tp", None), ("tp", None, None)]),
+    (r".*attn/wv", [("fsdp", "tp", None), ("tp", None, None)]),
+    (r".*attn/wo", [("tp", None, "fsdp"),        # (H, hd, d): heads first,
+                    (None, None, "tp")]),        # else col-parallel over d
+    (r".*attn/bq", ("tp", None)),
+    (r".*attn/bk", ("tp", None)),
+    (r".*attn/bv", ("tp", None)),
+    (r".*mlp/w_gate", ("fsdp", "tp")),           # (d, ff)
+    (r".*mlp/w_up", ("fsdp", "tp")),
+    (r".*mlp/w_down", ("tp", "fsdp")),           # (ff, d)
+    (r".*moe/router", (None, None)),             # (d, E) replicated
+    (r".*moe/we_gate", ("expert", "fsdp", None)),  # (E, d, ff)
+    (r".*moe/we_up", ("expert", "fsdp", None)),
+    (r".*moe/we_down", ("expert", None, "fsdp")),  # (E, ff, d)
+    (r".*ssm/w_in", ("fsdp", "tp")),
+    (r".*ssm/(w_out|c_out)", ("tp", "fsdp")),
+    (r".*ssm/conv_w", (None, None, "tp")),
+    (r".*(scale|bias|gamma|beta|dt_bias|a_log|d_skip)$", (None,)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_tree(params: Any, ctx: ShardCtx, rules: Sequence[Rule] = LM_RULES,
+              scan_prefix_dims: int = 0):
+    """NamedSharding tree for a param pytree via first-matching rule.
+
+    ``scan_prefix_dims``: leading stacked-layer dims (scan-over-layers) that
+    are not covered by the rule's names — they get None (replicated layer
+    axis)."""
+
+    def _one(names, shape):
+        names = tuple(names)
+        pad = len(shape) - len(names)
+        if pad < 0:  # rule longer than leaf rank: truncate from left
+            names = names[-len(shape):]
+            pad = 0
+        full = (None,) * pad + names
+        return filter_spec(ctx.resolve(full), shape, ctx.mesh)
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        shape = getattr(leaf, "shape", ())
+        for pat, names in rules:
+            if re.search(pat, s):
+                cands = names if isinstance(names, list) else [names]
+                spec = None
+                for cand in cands:
+                    spec = _one(cand, shape)
+                    if any(e is not None for e in spec):
+                        break
+                return NamedSharding(ctx.mesh, spec)
+        return ctx.sharding((None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def replicated(ctx: ShardCtx, tree: Any):
+    return jax.tree.map(lambda l: ctx.sharding((None,) * l.ndim), tree)

@@ -1,0 +1,319 @@
+"""Step builders + ShapeDtypeStruct input specs for every
+(architecture x input-shape) combination — consumed by the dry-run, the
+trainer and the server.
+
+Shapes (assignment):
+  train_4k      seq=4096    global_batch=256   train_step (fwd+bwd+adamw)
+  prefill_32k   seq=32768   global_batch=32    prefill_step
+  decode_32k    seq=32768   global_batch=128   serve_step (1 token vs cache)
+  long_500k     seq=524288  global_batch=1     serve_step, sub-quadratic only
+
+Sharding policy (DESIGN.md §5): batch over ("pod","data") when divisible;
+TP/EP over "model"; optional FSDP over "data"; long_500k shards the KV-cache
+sequence dim over "data" instead of the (size-1) batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import (
+    LM_RULES, ShardCtx, lc, make_ctx, spec_tree, use_ctx,
+)
+from repro.models.lm import encdec as ED
+from repro.models.lm import model as LM
+from repro.models.lm.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.models.lm.model import VISION_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str   # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, ("pure full-attention architecture: 500k decode is "
+                       "linear-memory in context (KV cache) with no "
+                       "sub-quadratic path; skipped per assignment rules")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.batch, shape.seq
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.family == "encdec":
+        half = S // 2
+        out = {"frames": _sds((B, half, cfg.d_model), cfg.dtype),
+               "tokens": _sds((B, half), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = _sds((B, half), jnp.int32)
+        return out
+    if cfg.family == "vlm":
+        n_img = min(cfg.n_frontend_tokens, S // 2)
+        out = {"tokens": _sds((B, S - n_img), jnp.int32),
+               "patch_embeds": _sds((B, n_img, VISION_DIM), cfg.dtype)}
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S - n_img), jnp.int32)
+        return out
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    init = ED.init_encdec if cfg.family == "encdec" else LM.init_lm
+    return jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+
+
+def cache_shape_specs(cfg: ModelConfig, shape: ShapeSpec):
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: ED.encdec_init_caches(cfg, shape.batch, shape.seq,
+                                          shape.seq // 2))
+    return jax.eval_shape(
+        lambda: LM.init_caches(cfg, shape.batch, shape.seq))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                with_opt: bool = True) -> Dict[str, Any]:
+    """All abstract inputs for the step function of (cfg, shape)."""
+    p = params_specs(cfg)
+    out: Dict[str, Any] = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        state = {"params": p}
+        if with_opt:
+            state["opt"] = jax.eval_shape(adamw_init, p)
+        out["state"] = state
+    else:
+        out["params"] = p
+        if shape.kind == "decode":
+            out["caches"] = cache_shape_specs(cfg, shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec trees
+# ---------------------------------------------------------------------------
+
+
+def make_shape_ctx(mesh, cfg: ModelConfig, shape: ShapeSpec,
+                   fsdp: bool = False) -> ShardCtx:
+    seq_sharded = shape.name == "long_500k"
+    dp_only = getattr(cfg, "parallel", "tp") == "dp_only"
+    ctx = make_ctx(mesh, fsdp=fsdp or dp_only, seq_sharded=seq_sharded,
+                   dp_only=dp_only)
+    # batch divisibility: fall back through progressively fewer axes
+    def axes_size(names):
+        s = 1
+        for n in names or ():
+            s *= mesh.shape[n]
+        return s
+    b = ctx.logical["batch"]
+    if b and shape.batch % axes_size(b) != 0:
+        for cand in (("data", "model"), ("data",), None):
+            cand = tuple(a for a in (cand or ()) if a in mesh.axis_names) \
+                or None
+            if cand is None or (shape.batch % axes_size(cand) == 0
+                                and shape.batch > 1):
+                ctx.logical["batch"] = cand
+                break
+    return ctx
+
+
+def batch_sharding(ctx: ShardCtx, batch_tree):
+    def assign(leaf):
+        names = ("batch",) + (None,) * (leaf.ndim - 1)
+        return ctx.sharding(names)
+    return jax.tree.map(assign, batch_tree)
+
+
+# per-leaf-name logical axes (trailing dims; left-padded with None for the
+# stacked-layer prefix).  Keyed by (name, ndim-of-unstacked-leaf).
+_CACHE_LEAF_AXES = {
+    ("k", 4): ("batch", "seq", "tp", None),    # (B, L, KV, hd)
+    ("v", 4): ("batch", "seq", "tp", None),
+    ("pos", 1): ("batch",),
+    ("ring", 0): (),
+    ("h", 4): ("batch", "tp", None, None),     # mamba (B, H, P, N)
+    ("conv", 3): ("batch", None, "tp"),        # (B, k-1, C)
+    ("C", 4): ("batch", "tp", None, None),     # mlstm (B, H, hd, hd)
+    ("n", 3): ("batch", "tp", None),           # mlstm (B, H, hd)
+    ("m", 2): ("batch", "tp"),                 # mlstm (B, H)
+    ("c", 2): ("batch", "tp"),                 # slstm (B, d)
+    ("n", 2): ("batch", "tp"),
+    ("h", 2): ("batch", "tp"),
+    ("m", 2): ("batch", "tp"),
+}
+
+
+def cache_sharding(ctx: ShardCtx, cfg: ModelConfig, caches_shape):
+    """Shape-aware cache spec tree; non-divisible dims fall back to
+    replicated via filter_spec."""
+    from repro.launch.sharding import filter_spec
+    from jax.sharding import NamedSharding
+
+    def assign(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        shape = leaf.shape
+        # try decreasing ndim (stacked prefix of 0..2 layer dims)
+        for strip in range(0, 3):
+            key = (name, len(shape) - strip)
+            if key in _CACHE_LEAF_AXES:
+                names = (None,) * strip + tuple(_CACHE_LEAF_AXES[key])
+                spec = filter_spec(ctx.resolve(names), shape, ctx.mesh)
+                if name in ("k", "v"):
+                    spec = _kv_fallback(spec, names, shape, strip)
+                return NamedSharding(ctx.mesh, spec)
+        return ctx.sharding((None,) * len(shape))
+
+    def _kv_fallback(spec, names, shape, strip):
+        """If the KV-head dim could not shard over the model axis (e.g.
+        kv=8 on a 16-way axis), shard the cache *sequence* dim over model
+        instead — otherwise a 32k cache replicates 16x per chip."""
+        head_dim_idx = strip + 2
+        seq_dim_idx = strip + 1
+        entries = list(spec)
+        while len(entries) < len(shape):
+            entries.append(None)
+        if entries[head_dim_idx] is not None:
+            return spec  # heads sharded fine
+        cur = entries[seq_dim_idx]
+        cur_t = () if cur is None else (cur if isinstance(cur, tuple)
+                                        else (cur,))
+        if "model" in cur_t:
+            return spec
+        cand = cur_t + ("model",)
+        size = 1
+        for a in cand:
+            size *= ctx.mesh.shape[a]
+        if shape[seq_dim_idx] % size == 0:
+            entries[seq_dim_idx] = cand if len(cand) > 1 else cand[0]
+            return P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, caches_shape)
+
+
+def state_sharding(ctx: ShardCtx, state_shape):
+    p_spec = spec_tree(state_shape["params"], ctx, LM_RULES)
+    out = {"params": p_spec}
+    if "opt" in state_shape:
+        mu = spec_tree(state_shape["opt"]["mu"], ctx, LM_RULES)
+        nu = spec_tree(state_shape["opt"]["nu"], ctx, LM_RULES)
+        out["opt"] = {"mu": mu, "nu": nu,
+                      "step": ctx.sharding(())}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    ctx: Optional[ShardCtx] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = ED.encdec_loss if cfg.family == "encdec" else LM.lm_loss
+
+    def train_step(state, batch):
+        with use_ctx(ctx):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg), has_aux=True)(
+                    state["params"])
+            new_p, new_opt, om = adamw_update(state["params"], grads,
+                                              state["opt"], opt_cfg)
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}, **om}
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeSpec,
+                      ctx: Optional[ShardCtx] = None):
+    def prefill_step(params, batch):
+        with use_ctx(ctx):
+            if cfg.family == "encdec":
+                logits, caches = ED.encdec_prefill(params, batch, cfg,
+                                                   shape.seq)
+            else:
+                logits, caches = LM.lm_prefill(params, batch, cfg, shape.seq)
+            token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return token, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+    def serve_step(params, caches, batch):
+        with use_ctx(ctx):
+            if cfg.family == "encdec":
+                logits, caches = ED.encdec_decode(params, batch["tokens"],
+                                                  caches, cfg)
+            else:
+                logits, caches = LM.lm_decode(params, batch["tokens"],
+                                              caches, cfg)
+            token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return token, caches
+
+    return serve_step
+
+
+def build_jitted(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 fsdp: bool = False, donate: bool = True):
+    """Returns (jitted_fn, abstract_args tuple) ready for .lower(*args)."""
+    ctx = make_shape_ctx(mesh, cfg, shape, fsdp=fsdp)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_sharding(ctx, specs["batch"])
+    if shape.kind == "train":
+        st_shard = state_sharding(ctx, specs["state"])
+        fn = make_train_step(cfg, ctx=ctx)
+        jit = jax.jit(fn, in_shardings=(st_shard, b_shard),
+                      out_shardings=(st_shard, None),
+                      donate_argnums=(0,) if donate else ())
+        return jit, (specs["state"], specs["batch"])
+    p_shard = spec_tree(specs["params"], ctx, LM_RULES)
+    c_shard = cache_sharding(ctx, cfg, cache_shape_specs(cfg, shape))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, shape, ctx=ctx)
+        jit = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                      out_shardings=(None, c_shard))
+        return jit, (specs["params"], specs["batch"])
+    fn = make_serve_step(cfg, ctx=ctx)
+    jit = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard),
+                  out_shardings=(None, c_shard),
+                  donate_argnums=(1,) if donate else ())
+    return jit, (specs["params"], specs["caches"], specs["batch"])

@@ -1,0 +1,177 @@
+"""Training driver.
+
+Two modes:
+* LM:   PYTHONPATH=src python -m repro.launch.train --arch llama3_2_3b \
+            --preset reduced --steps 50 --batch 8 --seq 128
+* CNN:  PYTHONPATH=src python -m repro.launch.train --arch vgg16 \
+            --preset reduced --steps 100 --strategy twophase --rows 4
+
+On this container the mesh is the local CPU host mesh; on a real pod the
+same code runs under make_production_mesh() (the dry-run proves lowering).
+Checkpoints + metrics land in --out.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import store
+from repro.data.pipeline import (
+    ImageDataset, ImageDatasetConfig, TokenDataset, TokenDatasetConfig,
+)
+from repro.optim.adamw import (
+    AdamWConfig, SGDConfig, adamw_init, adamw_update, sgd_init, sgd_update,
+    warmup_cosine,
+)
+
+
+def train_lm(args):
+    from repro.configs import get_config, get_reduced
+    from repro.models.lm import model as LM
+    from repro.models.lm import encdec as ED
+    from repro.launch.steps import make_train_step
+
+    cfg = get_reduced(args.arch) if args.preset == "reduced" \
+        else get_config(args.arch)
+    if args.row_chunks:
+        cfg = type(cfg)(**{**cfg.__dict__, "row_chunks": args.row_chunks})
+    key = jax.random.PRNGKey(args.seed)
+    init = ED.init_encdec if cfg.family == "encdec" else LM.init_lm
+    params = init(key, cfg)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"row_chunks={cfg.row_chunks} remat={cfg.remat}")
+
+    opt_cfg = AdamWConfig(lr=args.lr)
+    state = {"params": params, "opt": adamw_init(params)}
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+
+    ds = TokenDataset(TokenDatasetConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                         batch=args.batch, seed=args.seed))
+    os.makedirs(args.out, exist_ok=True)
+    log = []
+    t0 = time.time()
+    for step in range(args.steps):
+        hb = ds.batch_at(step)
+        batch = {"tokens": jnp.asarray(hb["tokens"]),
+                 "labels": jnp.asarray(hb["labels"])}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_frontend_tokens, 1152), jnp.float32)
+        if cfg.family == "encdec":
+            batch = {"frames": jnp.asarray(
+                        np.random.default_rng((args.seed, step)).normal(
+                            0, 1, (args.batch, args.seq, cfg.d_model))
+                        .astype(np.float32)),
+                     "tokens": batch["tokens"], "labels": batch["labels"]}
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = round(time.time() - t0, 1)
+            log.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"ce {m.get('ce', 0):.4f} gnorm {m['grad_norm']:.2f} "
+                  f"({m['elapsed_s']}s)")
+    if args.save:
+        store.save(args.out, args.steps, state["params"], state["opt"],
+                   {"arch": cfg.name})
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=2)
+    return log
+
+
+def train_cnn(args):
+    from repro.configs import get_config as _  # noqa
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{args.arch}")
+    ccfg = mod.reduced() if args.preset == "reduced" else mod.CONFIG
+    strategy = args.strategy or ccfg.strategy
+    n_rows = args.rows or ccfg.n_rows
+
+    from repro.core.hybrid import make_strategy_apply
+    from repro.models.cnn import resnet, vgg
+    key = jax.random.PRNGKey(args.seed)
+    shape = (ccfg.image, ccfg.image, ccfg.channels)
+    if ccfg.arch == "vgg16":
+        mods, params = vgg.init_vgg16(key, shape, ccfg.width_mult,
+                                      ccfg.n_classes)
+        head_apply = vgg.head_apply
+    else:
+        mods, params = resnet.init_resnet50(key, shape, ccfg.width_mult,
+                                            n_classes=ccfg.n_classes)
+        head_apply = resnet.head_apply
+    trunk_apply = make_strategy_apply(mods, ccfg.image, strategy, n_rows)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"arch={ccfg.arch} strategy={strategy} N={n_rows} "
+          f"params={n_params/1e6:.1f}M image={ccfg.image}")
+
+    def loss_fn(p, images, labels):
+        feats = trunk_apply(p["trunk"], images)
+        logits = head_apply(p["head"], feats)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+    opt_cfg = SGDConfig(lr=args.lr if args.lr != 3e-4 else 0.05)
+    opt = sgd_init(params)
+
+    @jax.jit
+    def step_fn(p, opt, images, labels):
+        loss, g = jax.value_and_grad(loss_fn)(p, images, labels)
+        p, opt, m = sgd_update(p, g, opt, opt_cfg)
+        return p, opt, loss, m
+
+    ds = ImageDataset(ImageDatasetConfig(
+        h=ccfg.image, w=ccfg.image, c=ccfg.channels,
+        n_classes=ccfg.n_classes, batch=args.batch or ccfg.batch,
+        seed=args.seed))
+    os.makedirs(args.out, exist_ok=True)
+    log = []
+    t0 = time.time()
+    for step in range(args.steps):
+        hb = ds.batch_at(step)
+        params, opt, loss, m = step_fn(params, opt,
+                                       jnp.asarray(hb["images"]),
+                                       jnp.asarray(hb["labels"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            rec = {"step": step, "loss": float(loss),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            log.append(rec)
+            print(f"step {step:5d} loss {rec['loss']:.4f} "
+                  f"({rec['elapsed_s']}s)")
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=2)
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--row-chunks", type=int, default=0)
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--rows", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--out", default="experiments/train")
+    ap.add_argument("--save", action="store_true")
+    args = ap.parse_args()
+    if args.arch in ("vgg16", "resnet50"):
+        train_cnn(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""ResNet-50 (He et al.) — the paper's branching-trunk benchmark.
+
+Trunk modules: stem conv (7x7 s2 p3) + maxpool (3x3 s2 p1) + 16 bottleneck
+blocks in stages [3, 4, 6, 3].  Each Bottleneck is one row-engine module
+(internal halo replicated — see DESIGN.md); BatchNorm uses running-stats
+normalisation for row-exactness, with Chan-merged moment updates available
+in layers.py.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn.layers import (
+    BatchNorm, Bottleneck, Conv, MaxPool, ReLU, apply_trunk, init_trunk,
+)
+
+_STAGES = [(256, 3), (512, 4), (1024, 6), (2048, 3)]
+
+
+def resnet50_modules(width_mult: float = 1.0, stage_blocks=None) -> List:
+    blocks = stage_blocks or [n for _, n in _STAGES]
+    mods: List = [
+        Conv(max(4, int(64 * width_mult)), k=7, s=2, p=3, bias=False),
+        BatchNorm(),
+        ReLU(),
+        MaxPool(k=3, s=2, p=1),
+    ]
+    for (cout, _), n in zip(_STAGES, blocks):
+        cout = max(8, int(cout * width_mult))
+        cmid = cout // 4
+        for i in range(n):
+            stride = 2 if (i == 0 and cout != max(8, int(256 * width_mult))) else 1
+            mods.append(Bottleneck(cmid, cout, s=stride, project=(i == 0)))
+    return mods
+
+
+def init_resnet50(key, in_shape=(224, 224, 3), width_mult: float = 1.0,
+                  n_classes: int = 10, stage_blocks=None):
+    mods = resnet50_modules(width_mult, stage_blocks)
+    k1, k2 = jax.random.split(key)
+    trunk_params, feat_shape = init_trunk(mods, k1, in_shape)
+    c = feat_shape[-1]
+    head = {
+        "w": jax.random.normal(k2, (c, n_classes), jnp.float32) / jnp.sqrt(c),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+    return mods, {"trunk": trunk_params, "head": head}
+
+
+def head_apply(head, feats):
+    pooled = jnp.mean(feats, axis=(1, 2))
+    return pooled @ head["w"] + head["b"]
+
+
+def forward(mods, params, x):
+    feats = apply_trunk(mods, params["trunk"], x)
+    return head_apply(params["head"], feats)

@@ -1,0 +1,55 @@
+"""VGG-16 (Simonyan & Zisserman) — the paper's chain-trunk benchmark.
+
+The conv trunk is a pure chain of Conv/ReLU/MaxPool modules, the ideal 2PS
+case.  The classifier head (FC layers) is column-centric per the paper
+(strong many-to-many dependency).  ``vgg16_modules(width_mult)`` lets tests
+shrink channels while keeping the exact layer geometry.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn.layers import Conv, MaxPool, ReLU, init_trunk, apply_trunk
+
+# (channels, n_convs) per VGG-16 stage
+_STAGES = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+
+
+def vgg16_modules(width_mult: float = 1.0, n_stages: int = 5) -> List:
+    mods: List = []
+    for c, n in _STAGES[:n_stages]:
+        cc = max(4, int(c * width_mult))
+        for _ in range(n):
+            mods.append(Conv(cc, k=3, s=1, p=1, bias=True))
+            mods.append(ReLU())
+        mods.append(MaxPool(k=2, s=2))
+    return mods
+
+
+def init_vgg16(key, in_shape=(224, 224, 3), width_mult: float = 1.0,
+               n_classes: int = 10, n_stages: int = 5):
+    mods = vgg16_modules(width_mult, n_stages)
+    k1, k2 = jax.random.split(key)
+    trunk_params, feat_shape = init_trunk(mods, k1, in_shape)
+    h, w, c = feat_shape
+    # GAP head (H-agnostic: required for the Split-CNN ablation, and the
+    # standard modern replacement for VGG's 7x7 flatten)
+    head = {
+        "w": jax.random.normal(k2, (c, n_classes), jnp.float32) / jnp.sqrt(c),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+    return mods, {"trunk": trunk_params, "head": head}
+
+
+def head_apply(head, feats):
+    pooled = jnp.mean(feats, axis=(1, 2))
+    return pooled @ head["w"] + head["b"]
+
+
+def forward(mods, params, x):
+    feats = apply_trunk(mods, params["trunk"], x)
+    return head_apply(params["head"], feats)

@@ -1,0 +1,282 @@
+"""GQA attention with RoPE, optional QKV bias, sliding-window masking, KV
+caches (full and ring-buffer), and row-centric query chunking.
+
+Row-centric notes (DESIGN.md §4): full causal attention has a *strong*
+dependency along the sequence — the paper's FC-layer carve-out — but the
+score matrix is still the dominant live activation in training.  We chunk
+the **query** axis (``n_chunks``) with per-chunk remat: each chunk's
+(B,H,c,S) score block is materialised, consumed and released — the same
+max-instead-of-sum liveness transformation as Eq. (7), applied to the one
+tensor that cannot be row-partitioned exactly.  Sliding-window ("local")
+layers have a genuinely weak dependency and use the OverL halo path in
+``repro.core.seqrow.swa_overlap_chunks``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch.sharding import lc
+from repro.models.lm.common import dense_init, rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    window: int = 0  # 0 = full causal
+
+
+def init_attn(key, dims: AttnDims, param_dtype):
+    ks = jax.random.split(key, 4)
+    d, H, KV, hd = dims.d, dims.n_heads, dims.n_kv, dims.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), param_dtype),
+        "wk": dense_init(ks[1], (d, KV, hd), param_dtype),
+        "wv": dense_init(ks[2], (d, KV, hd), param_dtype),
+        "wo": dense_init(ks[3], (H, hd, d), param_dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), param_dtype)
+        p["bk"] = jnp.zeros((KV, hd), param_dtype)
+        p["bv"] = jnp.zeros((KV, hd), param_dtype)
+    return p
+
+
+def _qkv(params, x, dims: AttnDims, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if dims.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = rope(q, positions, dims.rope_theta)
+    k = rope(k, positions, dims.rope_theta)
+    q = lc(q, "batch", None, "tp", None)
+    k = lc(k, "batch", None, "tp", None)
+    v = lc(v, "batch", None, "tp", None)
+    return q, k, v
+
+
+def _scores_mask(q_pos, k_pos, window: int, causal: bool = True):
+    """(..., Sq, Sk) causal (+ window) mask of additive NEG_INF."""
+    if not causal:
+        return jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend(q, k, v, q_pos, k_pos, window: int, n_q_per_kv: int,
+            causal: bool = True):
+    """q: (B,Sq,Hq,D), k/v: (B,Sk,KV,D) -> (B,Sq,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, n_q_per_kv, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D)
+    scores = scores + _scores_mask(q_pos, k_pos, window, causal)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def _proj_out(params, attn_out):
+    dt = attn_out.dtype
+    y = jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"].astype(dt))
+    return lc(y, "batch", None, None)
+
+
+def attn_train(params, x, dims: AttnDims, n_chunks: int = 1):
+    """Training/prefill forward over a full sequence, query-chunked."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _qkv(params, x, dims, positions)
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    if n_chunks <= 1 or S % n_chunks:
+        out = _attend(q, k, v, k_pos, k_pos, dims.window, dims.n_heads // dims.n_kv)
+    else:
+        c = S // n_chunks
+        outs = []
+        for i in range(n_chunks):
+            a = i * c
+            qc = lax.slice_in_dim(q, a, a + c, axis=1)
+            if dims.window > 0:
+                # OverL halo: only [a - window, a + c) keys can be attended
+                lo = max(0, a - dims.window)
+                kc = lax.slice_in_dim(k, lo, a + c, axis=1)
+                vc = lax.slice_in_dim(v, lo, a + c, axis=1)
+                kp = k_pos[lo:a + c]
+            else:
+                # causal: keys [0, a + c)
+                kc = lax.slice_in_dim(k, 0, a + c, axis=1)
+                vc = lax.slice_in_dim(v, 0, a + c, axis=1)
+                kp = k_pos[:a + c]
+            body = jax.checkpoint(
+                lambda qc, kc, vc, kp, a=a: _attend(
+                    qc, kc, vc, k_pos[a:a + c], kp, dims.window,
+                    dims.n_heads // dims.n_kv))
+            outs.append(body(qc, kc, vc, kp))
+        out = jnp.concatenate(outs, axis=1)
+    return _proj_out(params, out)
+
+
+def attn_bidir(params, x, dims: AttnDims, n_chunks: int = 1):
+    """Bidirectional self-attention (encoder side), query-chunked."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _qkv(params, x, dims, positions)
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    g = dims.n_heads // dims.n_kv
+    if n_chunks <= 1 or S % n_chunks:
+        out = _attend(q, k, v, k_pos, k_pos, 0, g, causal=False)
+    else:
+        c = S // n_chunks
+        outs = []
+        for i in range(n_chunks):
+            a = i * c
+            qc = lax.slice_in_dim(q, a, a + c, axis=1)
+            body = jax.checkpoint(lambda qc, a=a: _attend(
+                qc, k, v, k_pos[a:a + c], k_pos, 0, g, causal=False))
+            outs.append(body(qc))
+        out = jnp.concatenate(outs, axis=1)
+    return _proj_out(params, out)
+
+
+def cross_kv(params, y, dims: AttnDims):
+    """Precompute encoder-side K/V for cross-attention (no RoPE)."""
+    dt = y.dtype
+    k = jnp.einsum("bsd,dhk->bshk", y, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", y, params["wv"].astype(dt))
+    if dims.qkv_bias:
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    k = lc(k, "batch", None, "tp", None)
+    v = lc(v, "batch", None, "tp", None)
+    return {"k": k, "v": v}
+
+
+def attn_cross(params, x, kv, dims: AttnDims):
+    """Cross-attention of decoder states over precomputed encoder K/V."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if dims.qkv_bias:
+        q = q + params["bq"].astype(dt)
+    q = lc(q, "batch", None, "tp", None)
+    Sq = x.shape[1]
+    Sk = kv["k"].shape[1]
+    out = _attend(q, kv["k"], kv["v"],
+                  jnp.arange(Sq, dtype=jnp.int32),
+                  jnp.arange(Sk, dtype=jnp.int32),
+                  0, dims.n_heads // dims.n_kv, causal=False)
+    return _proj_out(params, out)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch, max_len, n_kv, head_dim, dtype, ring: bool = False):
+    """Cache pytree.  ``ring=True`` -> sliding-window ring buffer."""
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),  # absolute next position
+        "ring": jnp.array(ring),
+    }
+
+
+def cache_spec_axes(seq_sharded: bool):
+    """Logical sharding names for cache leaves (k/v, pos, ring)."""
+    seq = "seq" if seq_sharded else None
+    return {
+        "k": ("batch", seq, "tp", None),
+        "v": ("batch", seq, "tp", None),
+        "pos": ("batch",),
+        "ring": (),
+    }
+
+
+def attn_decode(params, x, cache, dims: AttnDims):
+    """One-token decode step.  x: (B, 1, d).  Returns (y, new_cache)."""
+    B = x.shape[0]
+    max_len = cache["k"].shape[1]
+    pos = cache["pos"]  # (B,)
+    positions = pos[:, None]
+    q, k_new, v_new = _qkv(params, x, dims, positions)
+
+    slot = jnp.where(cache["ring"], pos % max_len, jnp.minimum(pos, max_len - 1))
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    k = lc(k, "batch", None, "tp", None)
+    v = lc(v, "batch", None, "tp", None)
+
+    # absolute positions held in each cache slot
+    idx = jnp.arange(max_len, dtype=jnp.int32)
+    abs_pos = jnp.where(
+        cache["ring"],
+        # ring: slot i holds position  p - ((slot - i) mod max_len)
+        pos[:, None] - (slot[:, None] - idx[None, :]) % max_len,
+        idx[None, :],
+    )
+    valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if dims.window > 0:
+        valid &= abs_pos > (pos[:, None] - dims.window)
+
+    KV = k.shape[2]
+    g = dims.n_heads // dims.n_kv
+    qg = q.reshape(B, 1, KV, g, -1)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dims.head_dim)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, 1, dims.n_heads, dims.head_dim).astype(x.dtype)
+    y = _proj_out(params, out)
+    new_cache = {"k": k, "v": v, "pos": pos + 1, "ring": cache["ring"]}
+    return y, new_cache
+
+
+def attn_prefill(params, x, dims: AttnDims, cache_len: int,
+                 n_chunks: int = 1, ring: bool | None = None):
+    """Full-sequence forward that also returns a populated cache.
+
+    ``ring`` marks a sliding-window ring buffer (local layers pass True
+    explicitly — it must hold even when the prompt is shorter than the
+    window).  Ring slot discipline: position p lives at slot p % cache_len.
+    """
+    B, S, _ = x.shape
+    if ring is None:
+        ring = cache_len < S
+    y = attn_train(params, x, dims, n_chunks)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    _, k, v = _qkv(params, x, dims, positions)
+    if cache_len < S:  # keep the tail, placed at its ring slots
+        k = jnp.roll(k[:, S - cache_len:], S % cache_len, axis=1)
+        v = jnp.roll(v[:, S - cache_len:], S % cache_len, axis=1)
+    elif cache_len > S:
+        pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        if ring:
+            # positions p < S already sit at slot p == p % cache_len
+            pass
+    cache = {"k": k, "v": v,
+             "pos": jnp.full((B,), S, jnp.int32),
+             "ring": jnp.array(ring)}
+    return y, cache

@@ -1,0 +1,311 @@
+"""Decoder blocks for every architecture family + scan-over-layers stacking.
+
+Layer kinds (ModelConfig.layer_kinds):
+  attn          dense attention + SwiGLU MLP
+  local/global  gemma3-style sliding-window / full attention + MLP
+  moe           attention + MoE FFN (optional shared experts)
+  mamba         Mamba2 mixer only (norm + ssm + residual)
+  mlstm/slstm   xLSTM mixers
+  shared_attn   zamba2-style attention+MLP block whose params are SHARED
+                across all its occurrences (passed separately, not stacked)
+
+Stacking: ``ModelConfig.scan_segments()`` yields (pattern, count) segments;
+per segment, params are stacked over ``count`` and iterated with
+``lax.scan`` — keeps the HLO size O(#kinds), not O(#layers), which is what
+makes 94-layer × 512-device dry-runs compile in reasonable time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.lm.attention import (
+    AttnDims, attn_decode, attn_prefill, attn_train, init_attn, init_cache,
+)
+from repro.models.lm.common import init_rms, rms_norm
+from repro.models.lm.config import ModelConfig
+from repro.models.lm.mlp import init_mlp, mlp_apply
+from repro.models.lm.moe import MoEDims, init_moe, moe_apply
+from repro.models.lm.ssm import (
+    SSMDims, init_ssm, init_ssm_state, ssm_decode, ssm_train,
+)
+from repro.models.lm.xlstm import (
+    XLSTMDims, init_mlstm, init_mlstm_state, init_slstm, init_slstm_state,
+    mlstm_decode, mlstm_train, slstm_decode, slstm_train,
+)
+
+ZERO_AUX = {"load_balance": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def attn_dims(cfg: ModelConfig, kind: str) -> AttnDims:
+    return AttnDims(
+        d=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window if kind == "local" else 0)
+
+
+def ssm_dims(cfg: ModelConfig) -> SSMDims:
+    inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or cfg.n_heads
+    return SSMDims(d=cfg.d_model, n_heads=heads, head_p=inner // heads,
+                   state_n=cfg.ssm_state or 64, conv_k=cfg.conv_k)
+
+
+def xlstm_dims(cfg: ModelConfig) -> XLSTMDims:
+    return XLSTMDims(d=cfg.d_model, n_heads=cfg.n_heads,
+                     expand=cfg.ssm_expand)
+
+
+def moe_dims(cfg: ModelConfig) -> MoEDims:
+    return MoEDims(d=cfg.d_model, d_expert=cfg.d_expert,
+                   n_experts=cfg.n_experts, top_k=cfg.top_k,
+                   n_shared=cfg.n_shared_experts,
+                   capacity_factor=cfg.capacity_factor,
+                   seq_groups=cfg.moe_seq_groups)
+
+
+# ---------------------------------------------------------------------------
+# Single block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, cfg: ModelConfig):
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "local", "global", "shared_attn", "moe"):
+        p: Dict[str, Any] = {
+            "norm1": {"scale": init_rms(d, pd)},
+            "attn": init_attn(ks[0], attn_dims(cfg, kind), pd),
+            "norm2": {"scale": init_rms(d, pd)},
+        }
+        if kind == "moe":
+            p["moe"] = init_moe(ks[1], moe_dims(cfg), pd)
+        else:
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, pd)
+        return p
+    if kind == "mamba":
+        return {"norm1": {"scale": init_rms(d, pd)},
+                "ssm": init_ssm(ks[0], ssm_dims(cfg), pd)}
+    if kind == "mlstm":
+        return {"norm1": {"scale": init_rms(d, pd)},
+                "ssm": init_mlstm(ks[0], xlstm_dims(cfg), pd)}
+    if kind == "slstm":
+        return {"norm1": {"scale": init_rms(d, pd)},
+                "ssm": init_slstm(ks[0], xlstm_dims(cfg), pd)}
+    raise ValueError(kind)
+
+
+def block_train(params, x, kind: str, cfg: ModelConfig):
+    """Returns (x, aux)."""
+    eps = cfg.norm_eps
+    nc = cfg.row_chunks if cfg.remat in ("rows", "block_rows") else 1
+    aux = ZERO_AUX
+    if kind in ("attn", "local", "global", "shared_attn", "moe"):
+        h = rms_norm(x, params["norm1"]["scale"], eps)
+        x = x + attn_train(params["attn"], h, attn_dims(cfg, kind), nc)
+        h = rms_norm(x, params["norm2"]["scale"], eps)
+        if kind == "moe":
+            y, aux = moe_apply(params["moe"], h, moe_dims(cfg), nc)
+        else:
+            y = mlp_apply(params["mlp"], h, nc)
+        return x + y, aux
+    h = rms_norm(x, params["norm1"]["scale"], eps)
+    if kind == "mamba":
+        y = ssm_train(params["ssm"], h, ssm_dims(cfg))
+    elif kind == "mlstm":
+        y = mlstm_train(params["ssm"], h, xlstm_dims(cfg))
+    elif kind == "slstm":
+        y = slstm_train(params["ssm"], h, xlstm_dims(cfg))
+    else:
+        raise ValueError(kind)
+    return x + y, aux
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind in ("attn", "global", "shared_attn", "moe"):
+        return init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+    if kind == "local":
+        w = min(cfg.sliding_window, max_len)
+        return init_cache(batch, w, cfg.n_kv_heads, cfg.head_dim, dtype,
+                          ring=True)
+    if kind == "mamba":
+        return init_ssm_state(batch, ssm_dims(cfg), dtype)
+    if kind == "mlstm":
+        return init_mlstm_state(batch, xlstm_dims(cfg))
+    if kind == "slstm":
+        return init_slstm_state(batch, cfg.d_model)
+    raise ValueError(kind)
+
+
+def block_decode(params, x, cache, kind: str, cfg: ModelConfig):
+    """One-token step.  Returns (x, new_cache)."""
+    eps = cfg.norm_eps
+    if kind in ("attn", "local", "global", "shared_attn", "moe"):
+        h = rms_norm(x, params["norm1"]["scale"], eps)
+        y, cache = attn_decode(params["attn"], h, cache, attn_dims(cfg, kind))
+        x = x + y
+        h = rms_norm(x, params["norm2"]["scale"], eps)
+        if kind == "moe":
+            y, _ = moe_apply(params["moe"], h, moe_dims(cfg), 1)
+        else:
+            y = mlp_apply(params["mlp"], h, 1)
+        return x + y, cache
+    h = rms_norm(x, params["norm1"]["scale"], eps)
+    if kind == "mamba":
+        y, cache = ssm_decode(params["ssm"], h, cache, ssm_dims(cfg))
+    elif kind == "mlstm":
+        y, cache = mlstm_decode(params["ssm"], h, cache, xlstm_dims(cfg))
+    elif kind == "slstm":
+        y, cache = slstm_decode(params["ssm"], h, cache, xlstm_dims(cfg))
+    else:
+        raise ValueError(kind)
+    return x + y, cache
+
+
+def block_prefill(params, x, kind: str, cfg: ModelConfig, cache_len: int,
+                  dtype):
+    """Full-sequence forward returning (x, cache) for subsequent decode."""
+    eps = cfg.norm_eps
+    nc = cfg.row_chunks if cfg.remat in ("rows", "block_rows") else 1
+    B, S, _ = x.shape
+    if kind in ("attn", "global", "shared_attn", "moe", "local"):
+        clen = min(cfg.sliding_window, cache_len) if kind == "local" \
+            else cache_len
+        h = rms_norm(x, params["norm1"]["scale"], eps)
+        y, cache = attn_prefill(params["attn"], h, attn_dims(cfg, kind),
+                                clen, nc, ring=(kind == "local"))
+        x = x + y
+        h = rms_norm(x, params["norm2"]["scale"], eps)
+        if kind == "moe":
+            y, _ = moe_apply(params["moe"], h, moe_dims(cfg), nc)
+        else:
+            y = mlp_apply(params["mlp"], h, nc)
+        return x + y, cache
+    h = rms_norm(x, params["norm1"]["scale"], eps)
+    if kind == "mamba":
+        y, cache = ssm_train(params["ssm"], h, ssm_dims(cfg),
+                             return_state=True)
+    elif kind == "mlstm":
+        y, cache = mlstm_train(params["ssm"], h, xlstm_dims(cfg),
+                               return_state=True)
+    else:
+        y, cache = slstm_train(params["ssm"], h, xlstm_dims(cfg),
+                               return_state=True)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack: scan over segments of stacked layer groups
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, cfg: ModelConfig):
+    """Params: {"segments": [per-segment tuple over pattern positions of
+    stacked params], "shared": shared_attn params or None}."""
+    segs = cfg.scan_segments()
+    keys = jax.random.split(key, len(segs) + 1)
+    shared = None
+    if any("shared_attn" in pat for pat, _ in segs):
+        shared = init_block(keys[-1], "shared_attn", cfg)
+    segments = []
+    for (pat, count), k in zip(segs, keys):
+        pos_params = []
+        for j, kind in enumerate(pat):
+            if kind == "shared_attn":
+                pos_params.append(None)  # provided via `shared`
+                continue
+            kj = jax.random.fold_in(k, j)
+            stacked = jax.vmap(
+                lambda kk: init_block(kk, kind, cfg)
+            )(jax.random.split(kj, count))
+            pos_params.append(stacked)
+        segments.append(tuple(pos_params))
+    return {"segments": segments, "shared": shared}
+
+
+def _strip_none(seg_params, pat):
+    """Replace None (shared) positions with empty dicts for scan."""
+    return tuple({} if p is None else p for p in seg_params)
+
+
+def _seg_count(seg_params, pat):
+    for p in seg_params:
+        if p is not None:
+            return jax.tree.leaves(p)[0].shape[0]
+    return 1
+
+
+def stack_train(params, x, cfg: ModelConfig):
+    aux = ZERO_AUX
+    # block-level remat ("block"/"block_rows") = the paper's checkpointing
+    # hybrid: only each block's input survives FP->BP; row chunking inside
+    # the block is the row-centric part (2PS-H/OverL-H analogue).
+    blk = block_train
+    if cfg.remat in ("block", "block_rows"):
+        blk = jax.checkpoint(block_train,
+                             static_argnums=(2, 3))
+    for (pat, count), seg in zip(cfg.scan_segments(), params["segments"]):
+        def body(carry, group):
+            x, a = carry
+            for j, kind in enumerate(pat):
+                p = params["shared"] if kind == "shared_attn" else group[j]
+                x, a2 = blk(p, x, kind, cfg)
+                a = jax.tree.map(jnp.add, a, a2)
+            return (x, a), None
+
+        (x, aux), _ = lax.scan(body, (x, aux), _strip_none(seg, pat))
+    return x, aux
+
+
+def init_stack_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    caches = []
+    for pat, count in cfg.scan_segments():
+        group = []
+        for kind in pat:
+            c = init_block_cache(kind, cfg, batch, max_len, dtype)
+            group.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), c))
+        caches.append(tuple(group))
+    return caches
+
+
+def stack_decode(params, x, caches, cfg: ModelConfig):
+    new_caches = []
+    for (pat, count), seg, cgroup in zip(cfg.scan_segments(),
+                                         params["segments"], caches):
+        def body(x, xs):
+            group, gcache = xs
+            new_g = []
+            for j, kind in enumerate(pat):
+                p = params["shared"] if kind == "shared_attn" else group[j]
+                x, nc = block_decode(p, x, gcache[j], kind, cfg)
+                new_g.append(nc)
+            return x, tuple(new_g)
+
+        x, ncg = lax.scan(body, x, (_strip_none(seg, pat), cgroup))
+        new_caches.append(ncg)
+    return x, new_caches
+
+
+def stack_prefill(params, x, cfg: ModelConfig, cache_len: int, dtype):
+    caches = []
+    for (pat, count), seg in zip(cfg.scan_segments(), params["segments"]):
+        def body(x, group):
+            new_g = []
+            for j, kind in enumerate(pat):
+                p = params["shared"] if kind == "shared_attn" else group[j]
+                x, c = block_prefill(p, x, kind, cfg, cache_len, dtype)
+                new_g.append(c)
+            return x, tuple(new_g)
+
+        x, cg = lax.scan(body, x, _strip_none(seg, pat))
+        caches.append(cg)
+    return x, caches

@@ -1,0 +1,58 @@
+"""Shared LM primitives: norms, rotary embeddings, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import lc
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d, param_dtype):
+    return jnp.zeros((d,), param_dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab, d, param_dtype):
+    return {"table": dense_init(key, (vocab, d), param_dtype, scale=0.02)}
+
+
+def embed_apply(params, tokens, dtype):
+    out = jnp.take(params["table"].astype(dtype), tokens, axis=0)
+    return lc(out, "batch", None, None)
+
+
+def unembed_init(key, d, vocab, param_dtype):
+    return {"w": dense_init(key, (d, vocab), param_dtype)}
+
+
+def unembed_apply(params, x, dtype):
+    logits = x.astype(dtype) @ params["w"].astype(dtype)
+    return lc(logits, "batch", None, "tp")

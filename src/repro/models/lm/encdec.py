@@ -1,0 +1,192 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium assignment).
+
+The speech frontend (mel filterbank + conv feature extractor) is the
+sanctioned stub: ``batch["frames"]`` carries precomputed frame embeddings
+(B, T_frames, d_model).  The implemented system is the transformer
+backbone: a bidirectional encoder over frames and a causal text decoder
+with per-layer cross-attention — both scan-over-layers stacked.
+
+Decode shapes lower the *decoder* serve step (self-attn KV cache +
+precomputed cross K/V); the encoder has no decode step (noted in
+DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch.sharding import lc
+from repro.models.lm.attention import (
+    AttnDims, attn_bidir, attn_cross, attn_decode, attn_prefill, attn_train,
+    cross_kv, init_attn, init_cache,
+)
+from repro.models.lm.blocks import attn_dims
+from repro.models.lm.common import (
+    embed_apply, embed_init, init_rms, rms_norm, unembed_apply, unembed_init,
+)
+from repro.models.lm.config import ModelConfig
+from repro.models.lm.mlp import init_mlp, mlp_apply
+
+
+def _nc(cfg):
+    return cfg.row_chunks if cfg.remat in ("rows", "block_rows") else 1
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    return {"norm1": {"scale": init_rms(d, pd)},
+            "attn": init_attn(ks[0], attn_dims(cfg, "attn"), pd),
+            "norm2": {"scale": init_rms(d, pd)},
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, pd)}
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    return {"norm1": {"scale": init_rms(d, pd)},
+            "self_attn": init_attn(ks[0], attn_dims(cfg, "attn"), pd),
+            "norm_x": {"scale": init_rms(d, pd)},
+            "cross_attn": init_attn(ks[1], attn_dims(cfg, "attn"), pd),
+            "norm2": {"scale": init_rms(d, pd)},
+            "mlp": init_mlp(ks[2], d, cfg.d_ff, pd)}
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(ks[0], cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": embed_init(ks[2], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "enc": enc,
+        "dec": dec,
+        "enc_norm": {"scale": init_rms(cfg.d_model, cfg.param_dtype)},
+        "final_norm": {"scale": init_rms(cfg.d_model, cfg.param_dtype)},
+        "unembed": unembed_init(ks[3], cfg.d_model, cfg.vocab,
+                                cfg.param_dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    dims = attn_dims(cfg, "attn")
+    eps = cfg.norm_eps
+    nc = _nc(cfg)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"]["scale"], eps)
+        x = x + attn_bidir(lp["attn"], h, dims, nc)
+        h = rms_norm(x, lp["norm2"]["scale"], eps)
+        return x + mlp_apply(lp["mlp"], h, nc), None
+
+    x = lc(frames, "batch", None, None)
+    x, _ = lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"]["scale"], eps)
+
+
+def _dec_layer(lp, x, enc_out, cfg: ModelConfig, nc: int):
+    dims = attn_dims(cfg, "attn")
+    eps = cfg.norm_eps
+    h = rms_norm(x, lp["norm1"]["scale"], eps)
+    x = x + attn_train(lp["self_attn"], h, dims, nc)
+    h = rms_norm(x, lp["norm_x"]["scale"], eps)
+    kv = cross_kv(lp["cross_attn"], enc_out, dims)
+    x = x + attn_cross(lp["cross_attn"], h, kv, dims)
+    h = rms_norm(x, lp["norm2"]["scale"], eps)
+    return x + mlp_apply(lp["mlp"], h, nc)
+
+
+def encdec_forward(params, batch, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, batch["frames"].astype(dtype), cfg)
+    x = embed_apply(params["embed"], batch["tokens"], dtype)
+    nc = _nc(cfg)
+
+    def body(x, lp):
+        return _dec_layer(lp, x, enc_out, cfg, nc), None
+
+    x, _ = lax.scan(body, x, params["dec"])
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed_apply(params["unembed"], x, dtype)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    logits = encdec_forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with self-KV cache and precomputed cross-K/V
+# ---------------------------------------------------------------------------
+
+
+def encdec_prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    dims = attn_dims(cfg, "attn")
+    eps = cfg.norm_eps
+    nc = _nc(cfg)
+    enc_out = encode(params, batch["frames"].astype(dtype), cfg)
+    x = embed_apply(params["embed"], batch["tokens"], dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"]["scale"], eps)
+        y, cache = attn_prefill(lp["self_attn"], h, dims, cache_len, nc)
+        x = x + y
+        h = rms_norm(x, lp["norm_x"]["scale"], eps)
+        kv = cross_kv(lp["cross_attn"], enc_out, dims)
+        x = x + attn_cross(lp["cross_attn"], h, kv, dims)
+        h = rms_norm(x, lp["norm2"]["scale"], eps)
+        return x + mlp_apply(lp["mlp"], h, nc), {"self": cache, "cross": kv}
+
+    x, caches = lax.scan(body, x, params["dec"])
+    x = rms_norm(x[:, -1:], params["final_norm"]["scale"], eps)
+    return unembed_apply(params["unembed"], x, dtype), caches
+
+
+def encdec_init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       enc_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    one_self = init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+    one_cross = {
+        "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    stack = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), t)
+    return {"self": stack(one_self), "cross": stack(one_cross)}
+
+
+def encdec_decode(params, tokens, caches, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    dims = attn_dims(cfg, "attn")
+    eps = cfg.norm_eps
+    x = embed_apply(params["embed"], tokens, dtype)
+
+    def body(x, xs):
+        lp, cache = xs
+        h = rms_norm(x, lp["norm1"]["scale"], eps)
+        y, new_self = attn_decode(lp["self_attn"], h, cache["self"], dims)
+        x = x + y
+        h = rms_norm(x, lp["norm_x"]["scale"], eps)
+        x = x + attn_cross(lp["cross_attn"], h, cache["cross"], dims)
+        h = rms_norm(x, lp["norm2"]["scale"], eps)
+        x = x + mlp_apply(lp["mlp"], h, 1)
+        return x, {"self": new_self, "cross": cache["cross"]}
+
+    x, new_caches = lax.scan(body, x, (params["dec"], caches))
+    x = rms_norm(x, params["final_norm"]["scale"], eps)
+    return unembed_apply(params["unembed"], x, dtype), new_caches

@@ -1,0 +1,33 @@
+"""SwiGLU MLP with row-centric sequence chunking (halo-0 exact case)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.seqrow import chunked_apply
+from repro.launch.sharding import lc
+from repro.models.lm.common import dense_init
+
+
+def init_mlp(key, d, ff, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), param_dtype),
+        "w_up": dense_init(k2, (d, ff), param_dtype),
+        "w_down": dense_init(k3, (ff, d), param_dtype),
+    }
+
+
+def _mlp(params, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    h = lc(h, "batch", None, "tp")
+    y = h @ params["w_down"].astype(dt)
+    return lc(y, "batch", None, None)
+
+
+def mlp_apply(params, x, n_chunks: int = 1):
+    """Per-token: LR-CNN row partitioning along sequence is exact (halo 0).
+    n_chunks > 1 bounds the live (B, S, ff) hidden to (B, S/n, ff)."""
+    return chunked_apply(lambda xc: _mlp(params, xc), x, n_chunks)

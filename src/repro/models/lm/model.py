@@ -1,0 +1,144 @@
+"""Top-level decoder-only LM: init, train loss, prefill, decode.
+
+Covers dense / MoE / SSM / hybrid / VLM families.  The VLM vision tower is
+a sanctioned stub (DESIGN.md §7): ``batch["patch_embeds"]`` carries
+precomputed SigLIP-style patch embeddings (B, n_patches, frontend_dim)
+which a learned 2-layer projector maps into d_model and prepends to the
+token embeddings (LLaVA-NeXT anyres tiling determines n_patches).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import lc
+from repro.models.lm.blocks import (
+    init_stack, init_stack_caches, stack_decode, stack_prefill, stack_train,
+)
+from repro.models.lm.common import (
+    dense_init, embed_apply, embed_init, init_rms, rms_norm, unembed_apply,
+    unembed_init,
+)
+from repro.models.lm.config import ModelConfig
+
+VISION_DIM = 1152  # SigLIP-so400m patch embedding width (stub frontend)
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "stack": init_stack(ks[1], cfg),
+        "final_norm": {"scale": init_rms(cfg.d_model, cfg.param_dtype)},
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = unembed_init(ks[2], cfg.d_model, cfg.vocab,
+                                         cfg.param_dtype)
+    if cfg.frontend == "vision":
+        params["projector"] = {
+            "w1": dense_init(ks[3], (VISION_DIM, cfg.d_model),
+                             cfg.param_dtype),
+            "w2": dense_init(ks[4], (cfg.d_model, cfg.d_model),
+                             cfg.param_dtype),
+        }
+    return params
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig, dtype):
+    x = embed_apply(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vision":
+        pe = batch["patch_embeds"].astype(dtype)
+        pe = jax.nn.gelu(pe @ params["projector"]["w1"].astype(dtype))
+        pe = pe @ params["projector"]["w2"].astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)  # image tokens first (LLaVA)
+    return lc(x, "batch", None, None)
+
+
+def _logits(params, x, cfg: ModelConfig, dtype):
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"].astype(dtype)
+        logits = x @ table.T
+        return lc(logits, "batch", None, "tp")
+    return unembed_apply(params["unembed"], x, dtype)
+
+
+def lm_forward(params, batch, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(params, batch, cfg, dtype)
+    x, aux = stack_train(params["stack"], x, cfg)
+    return _logits(params, x, cfg, dtype), aux
+
+
+def softmax_xent(logits, labels):
+    """Sharding-friendly CE: logsumexp + one-hot contraction (no gather
+    across a vocab-sharded axis, no all-gather of logits).  fp32 math on
+    bf16 logits.  Returns (sum_nll, n_valid)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)                       # (B, S)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=jnp.float32)
+    picked = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - picked) * mask), jnp.sum(mask)
+
+
+def chunked_xent(x, labels, logits_fn, n_chunks: int):
+    """Row-centric loss: the (B, S, V) logits tensor is never materialised
+    whole — per sequence chunk: project -> CE -> release (Eq. 7 applied to
+    the classifier head, the single largest activation in LM training)."""
+    B, S = labels.shape
+    if n_chunks <= 1 or S % n_chunks:
+        return softmax_xent(logits_fn(x), labels)
+    c = S // n_chunks
+    tot, cnt = jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        body = jax.checkpoint(
+            lambda xc, lc_, i=i: softmax_xent(logits_fn(xc), lc_))
+        t, n = body(jax.lax.slice_in_dim(x, i * c, (i + 1) * c, axis=1),
+                    jax.lax.slice_in_dim(labels, i * c, (i + 1) * c, axis=1))
+        tot += t
+        cnt += n
+    return tot, cnt
+
+
+def lm_loss(params, batch, cfg: ModelConfig,
+            lb_coeff: float = 0.01, z_coeff: float = 1e-3):
+    """Next-token CE (labels = batch["labels"], -1 = ignore) + MoE aux."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(params, batch, cfg, dtype)
+    x, aux = stack_train(params["stack"], x, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":  # image positions carry no labels
+        n_img = x.shape[1] - labels.shape[1]
+        x = x[:, n_img:]
+    nc = cfg.row_chunks if cfg.remat in ("rows", "block_rows") else 1
+    tot, cnt = chunked_xent(x, labels,
+                            lambda xc: _logits(params, xc, cfg, dtype), nc)
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + lb_coeff * aux["load_balance"] + z_coeff * aux["z_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Full-sequence forward; returns (last-token logits, caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(params, batch, cfg, dtype)
+    x, caches = stack_prefill(params["stack"], x, cfg, cache_len, dtype)
+    logits = _logits(params, x[:, -1:], cfg, dtype)
+    return logits, caches
+
+
+def lm_decode(params, tokens, caches, cfg: ModelConfig):
+    """One-token decode.  tokens: (B, 1) int32.  Returns (logits, caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dtype)
+    x, caches = stack_decode(params["stack"], x, caches, cfg)
+    return _logits(params, x, cfg, dtype), caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return init_stack_caches(cfg, batch, max_len, jnp.dtype(cfg.dtype))

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch
+(GShard-style einsum), shared experts (DeepSeek-MoE), expert parallelism
+over the ``model`` mesh axis.
+
+Dispatch granularity: tokens are re-grouped as (G, t, d) where
+``G = batch * moe_seq_groups`` is sharded over *both* mesh axes
+(P(("data","model"))) so the (G, t, E, C) dispatch mask stays small per
+device; the expert dimension of the weight tensors is sharded over
+``model`` (EP).  XLA inserts the all-to-all between the token sharding and
+the expert sharding — visible in the dry-run collective table.
+
+Aux losses: load-balance (Switch-style) + router z-loss, returned to the
+caller for the training objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import lc
+from repro.models.lm.common import dense_init
+from repro.models.lm.mlp import init_mlp, mlp_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d: int
+    d_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    seq_groups: int = 4
+
+
+def init_moe(key, dims: MoEDims, param_dtype):
+    ks = jax.random.split(key, 5)
+    E, d, f = dims.n_experts, dims.d, dims.d_expert
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32, scale=0.02),
+        "we_gate": dense_init(ks[1], (E, d, f), param_dtype),
+        "we_up": dense_init(ks[2], (E, d, f), param_dtype),
+        "we_down": dense_init(ks[3], (E, f, d), param_dtype),
+    }
+    if dims.n_shared:
+        p["shared"] = init_mlp(ks[4], d, f * dims.n_shared, param_dtype)
+    return p
+
+
+def _capacity(t: int, dims: MoEDims) -> int:
+    c = int(t * dims.top_k / dims.n_experts * dims.capacity_factor)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_apply(params, x, dims: MoEDims, n_chunks: int = 1):
+    """x: (B, S, d) -> (y, aux) with aux = {load_balance, z_loss}."""
+    B, S, d = x.shape
+    sg = dims.seq_groups if S % dims.seq_groups == 0 else 1
+    G = B * sg
+    t = S // sg
+    xt = x.reshape(G, t, d)
+    xt = lc(xt, ("batch", "tp"), None, None)  # G over data*model
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (G, t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # --- top-k routing with capacity -----------------------------------
+    k = dims.top_k
+    E = dims.n_experts
+    C = _capacity(t, dims)
+    topw, topi = jax.lax.top_k(probs, k)                       # (G, t, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)        # (G, t, k, E)
+    # position of each (token, choice) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(G, t * k, E), axis=1).reshape(G, t, k, E)
+    pos = (pos - 1.0) * onehot                                 # 0-based ranks
+    keep = (pos < C) & (onehot > 0)
+    # dispatch (G, t, E, C) / combine — accumulate over the k choices to
+    # avoid the (G, t, k, E, C) intermediate
+    dispatch = jnp.zeros((G, t, E, C), jnp.float32)
+    combine = jnp.zeros((G, t, E, C), jnp.float32)
+    for i in range(k):
+        pc = jax.nn.one_hot(pos[:, :, i].astype(jnp.int32), C,
+                            dtype=jnp.float32) * keep[:, :, i, :, None]
+        dispatch = dispatch + pc
+        combine = combine + topw[:, :, i, None, None] * pc
+
+    dt = x.dtype
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xt)
+    xin = lc(xin, None, "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin,
+                               params["we_gate"].astype(dt))) \
+        * jnp.einsum("gecd,edf->gecf", xin, params["we_up"].astype(dt))
+    xout = jnp.einsum("gecf,efd->gecd", h, params["we_down"].astype(dt))
+    xout = lc(xout, None, "expert", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), xout)
+    y = y.reshape(B, S, d)
+    y = lc(y, "batch", None, None)
+
+    if dims.n_shared:
+        y = y + mlp_apply(params["shared"], x, n_chunks)
+
+    # --- aux losses ------------------------------------------------------
+    me = probs.mean(axis=(0, 1))                     # mean router prob per e
+    ce = onehot.sum(axis=2).mean(axis=(0, 1))        # fraction routed per e
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y, {"load_balance": load_balance, "z_loss": z_loss}

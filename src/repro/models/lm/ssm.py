@@ -1,0 +1,200 @@
+"""Mamba2 (SSD, chunked) — the recurrent-scan family where LR-CNN's 2PS is
+structurally native (DESIGN.md §4): the inter-chunk recurrent state *is* the
+two-phase boundary cache, computed once and carried to the next sequence
+row; per-chunk remat is the BP half of Alg. 1.
+
+Simplified-but-faithful SSD: scalar-per-head decay ``a_t = exp(-softplus
+(dt_bias + dt_t) * exp(a_log))``, state update ``h_t = a_t h_{t-1} + dt_t *
+B_t ⊗ x_t``, output ``y_t = C_t · h_t + D x_t`` with multi-head structure
+(n_heads × head_p × state_n), causal-conv1d input stage, gated output.
+
+Train path uses the chunked formulation: intra-chunk causal attention-like
+term + inter-chunk carried state via ``repro.core.seqrow.carry_scan_remat``.
+Decode carries (B, H, P, N) state — O(1) in context length (long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.seqrow import carry_scan_remat
+from repro.launch.sharding import lc
+from repro.models.lm.common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d: int
+    n_heads: int
+    head_p: int      # channels per head (inner = n_heads * head_p)
+    state_n: int     # SSM state size per channel
+    conv_k: int = 4
+    chunk: int = 256  # SSD chunk (the sequence "row" granularity)
+
+    @property
+    def inner(self) -> int:
+        return self.n_heads * self.head_p
+
+
+def init_ssm(key, dims: SSMDims, param_dtype):
+    ks = jax.random.split(key, 6)
+    d, inner, N, H = dims.d, dims.inner, dims.state_n, dims.n_heads
+    return {
+        # in-projection packs [x(inner) | z(inner) | B(N) | C(N) | dt(H)]
+        "w_in": dense_init(ks[0], (d, 2 * inner + 2 * N + H), param_dtype),
+        "conv_w": dense_init(ks[1], (dims.conv_k, 1, inner + 2 * N),
+                             param_dtype, scale=0.5),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "w_out": dense_init(ks[2], (inner, d), param_dtype),
+    }
+
+
+def _split_proj(proj, dims: SSMDims):
+    inner, N, H = dims.inner, dims.state_n, dims.n_heads
+    x = proj[..., :inner]
+    z = proj[..., inner:2 * inner]
+    B = proj[..., 2 * inner:2 * inner + N]
+    C = proj[..., 2 * inner + N:2 * inner + 2 * N]
+    dt = proj[..., 2 * inner + 2 * N:]
+    return x, z, B, C, dt
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv1d.  u: (B, S, C); w: (k, 1, C).
+    state: (B, k-1, C) trailing context (decode) or None (train, zero-pad).
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)
+    y = sum(ext[:, i:i + u.shape[1]] * w[i, 0] for i in range(k))
+    new_state = ext[:, -(k - 1):] if k > 1 else ext[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunk(x, B, C, a, dt, h0, dims: SSMDims):
+    """Exact SSD over one chunk given incoming state h0.
+
+    x: (Bt, c, H, P); B/C: (Bt, c, N); a: (Bt, c, H) decay in (0,1);
+    dt: (Bt, c, H); h0: (Bt, H, P, N).  Returns (y, h_out)."""
+    # cumulative log decay
+    la = jnp.log(a + 1e-12)                      # (Bt, c, H)
+    cum = jnp.cumsum(la, axis=1)                 # L_t = sum_{<=t} log a
+    # intra-chunk: y_t += C_t . sum_{s<=t} exp(L_t - L_s) dt_s B_s x_s
+    # build (t, s) decay matrix per head
+    diff = cum[:, :, None, :] - cum[:, None, :, :]        # (Bt, t, s, H)
+    mask = jnp.tril(jnp.ones((x.shape[1], x.shape[1]), bool))
+    w = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("btn,bsn->bts", C, B)                 # (Bt, t, s)
+    scores = cb[..., None] * w                            # (Bt, t, s, H)
+    xdt = x * dt[..., None]                               # (Bt, s, H, P)
+    y = jnp.einsum("btsh,bshp->bthp", scores, xdt)
+    # contribution of the carried state
+    decay_t = jnp.exp(cum)                                # (Bt, t, H)
+    y = y + jnp.einsum("btn,bhpn,bth->bthp", C, h0, decay_t)
+    # outgoing state
+    tail = jnp.exp(cum[:, -1:, :] - cum)                  # (Bt, s, H)
+    h_out = h0 * jnp.exp(cum[:, -1, :])[:, :, None, None] \
+        + jnp.einsum("bshp,bsn,bsh->bhpn", xdt, B, tail)
+    return y, h_out
+
+
+def ssm_train(params, x, dims: SSMDims, return_state: bool = False):
+    """Full-sequence training forward via chunked SSD + carried-state scan
+    (2PS along the sequence).  ``return_state=True`` (prefill) additionally
+    returns the final recurrent + conv state for decode."""
+    Bt, S, d = x.shape
+    dt_ = x.dtype
+    proj = x @ params["w_in"].astype(dt_)
+    xs, z, B, C, dtproj = _split_proj(proj, dims)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"].astype(dt_))
+    conv_state = conv_in[:, -(dims.conv_k - 1):] if dims.conv_k > 1 \
+        else conv_in[:, :0]
+    xs = conv_out[..., :dims.inner]
+    B = conv_out[..., dims.inner:dims.inner + dims.state_n]
+    C = conv_out[..., dims.inner + dims.state_n:]
+    xs = lc(xs, "batch", None, "tp")
+
+    H, P, N = dims.n_heads, dims.head_p, dims.state_n
+    xh = xs.reshape(Bt, S, H, P).astype(jnp.float32)
+    dt_act = jax.nn.softplus(dtproj.astype(jnp.float32)
+                             + params["dt_bias"])          # (Bt, S, H)
+    a = jnp.exp(-dt_act * jnp.exp(params["a_log"]))        # decay in (0,1)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    n_chunks = max(1, S // dims.chunk)
+
+    def body(h, chunk):
+        xc, Bc, Cc, ac, dtc = chunk
+        y, h2 = _ssd_chunk(xc, Bc, Cc, ac, dtc, h, dims)
+        return h2, y
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    if n_chunks > 1:
+        c = S // n_chunks
+        stack = lambda u: jnp.moveaxis(
+            u.reshape((Bt, n_chunks, c) + u.shape[2:]), 1, 0)
+        h_fin, ys = lax.scan(jax.checkpoint(body), h0,
+                             (stack(xh), stack(Bf), stack(Cf), stack(a),
+                              stack(dt_act)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(Bt, S, H, P)
+    else:
+        h_fin, y = body(h0, (xh, Bf, Cf, a, dt_act))
+
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = (y.reshape(Bt, S, dims.inner) * jax.nn.silu(z.astype(jnp.float32))
+         ).astype(dt_)
+    out = y @ params["w_out"].astype(dt_)
+    out = lc(out, "batch", None, None)
+    if return_state:
+        return out, {"h": h_fin, "conv": conv_state}
+    return out
+
+
+def init_ssm_state(batch, dims: SSMDims, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, dims.n_heads, dims.head_p, dims.state_n),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, dims.conv_k - 1,
+                           dims.inner + 2 * dims.state_n), dtype),
+    }
+
+
+def ssm_decode(params, x, state, dims: SSMDims):
+    """One-token decode.  x: (B, 1, d).  O(1) state — no KV growth."""
+    Bt = x.shape[0]
+    dt_ = x.dtype
+    proj = x @ params["w_in"].astype(dt_)
+    xs, z, B, C, dtproj = _split_proj(proj, dims)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"].astype(dt_),
+                                        state["conv"])
+    xs = conv_out[..., :dims.inner]
+    B = conv_out[..., dims.inner:dims.inner + dims.state_n]
+    C = conv_out[..., dims.inner + dims.state_n:]
+
+    H, P, N = dims.n_heads, dims.head_p, dims.state_n
+    xh = xs.reshape(Bt, 1, H, P).astype(jnp.float32)[:, 0]       # (B, H, P)
+    dt_act = jax.nn.softplus(dtproj.astype(jnp.float32)[:, 0]
+                             + params["dt_bias"])                # (B, H)
+    a = jnp.exp(-dt_act * jnp.exp(params["a_log"]))
+    Bf = B.astype(jnp.float32)[:, 0]                             # (B, N)
+    Cf = C.astype(jnp.float32)[:, 0]
+    h = state["h"] * a[:, :, None, None] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xh, Bf, dt_act)
+    y = jnp.einsum("bn,bhpn->bhp", Cf, h) \
+        + xh * params["d_skip"][None, :, None]
+    y = (y.reshape(Bt, 1, dims.inner)
+         * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = y @ params["w_out"].astype(dt_)
+    return lc(out, "batch", None, None), {"h": h, "conv": conv_state}

@@ -1,0 +1,238 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, exp gating) and
+sLSTM (scalar memory, hidden-state recurrence).
+
+Both are recurrent scans — the LR-CNN 2PS mapping (carried state = boundary
+cache) applies directly: training runs an outer ``lax.scan`` over sequence
+chunks with a ``jax.checkpoint``-ed body (per-chunk BP recompute), an inner
+exact scan within the chunk.  Decode is a single recurrence step with O(1)
+state (long_500k eligible).
+
+Stabilised exponential gating follows the paper: ``m_t = max(f̃+m, ĩ)``,
+``i' = exp(ĩ−m)``, ``f' = exp(f̃+m_prev−m)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch.sharding import lc
+from repro.models.lm.common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMDims:
+    d: int
+    n_heads: int
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def inner(self) -> int:
+        return self.d * self.expand
+
+    @property
+    def head_dim(self) -> int:
+        return self.inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, dims: XLSTMDims, param_dtype):
+    ks = jax.random.split(key, 7)
+    d, inner, H, hd = dims.d, dims.inner, dims.n_heads, dims.head_dim
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * inner), param_dtype),   # x | gate z
+        "wq": dense_init(ks[1], (inner, inner), param_dtype),
+        "wk": dense_init(ks[2], (inner, inner), param_dtype),
+        "wv": dense_init(ks[3], (inner, inner), param_dtype),
+        "w_if": dense_init(ks[4], (inner, 2 * H), param_dtype, scale=0.02),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),  # forget-gate bias
+        "w_out": dense_init(ks[5], (inner, d), param_dtype),
+    }
+
+
+def _mlstm_step(carry, qkvif):
+    """carry: (C, n, m) with C: (B,H,hd,hd), n: (B,H,hd), m: (B,H).
+    qkvif: per-step (q, k, v): (B,H,hd) and (i, f): (B,H)."""
+    C, n, m = carry
+    q, k, v, ig, fg = qkvif
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]
+    f_p = jnp.exp(fg + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * v[..., None] * k[..., None, :]
+    n = f_p * n + i_p * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_scan(qkvif_seq, carry):
+    """Inner exact scan over a chunk. qkvif_seq leaves: (B, c, H, ...)."""
+    seq = jax.tree.map(lambda u: jnp.moveaxis(u, 1, 0), qkvif_seq)
+    carry, hs = lax.scan(_mlstm_step, carry, seq)
+    return jnp.moveaxis(hs, 0, 1), carry
+
+
+def mlstm_train(params, x, dims: XLSTMDims, return_state: bool = False):
+    B, S, d = x.shape
+    dt = x.dtype
+    proj = x @ params["w_in"].astype(dt)
+    xi, z = jnp.split(proj, 2, axis=-1)
+    xi = lc(xi, "batch", None, "tp")
+    H, hd = dims.n_heads, dims.head_dim
+    q = (xi @ params["wq"].astype(dt)).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xi @ params["wk"].astype(dt)).reshape(B, S, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = (xi @ params["wv"].astype(dt)).reshape(B, S, H, hd).astype(jnp.float32)
+    gates = (xi @ params["w_if"].astype(dt)).astype(jnp.float32)
+    ig = gates[..., :H]
+    fg = jax.nn.log_sigmoid(gates[..., H:] + params["f_bias"])
+
+    n_chunks = max(1, S // dims.chunk)
+    carry0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+              jnp.zeros((B, H, hd), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+
+    if n_chunks > 1:
+        c = S // n_chunks
+        def stack(u):
+            return jnp.moveaxis(u.reshape((B, n_chunks, c) + u.shape[2:]), 1, 0)
+        def body(carry, chunk):
+            hs, carry = _mlstm_scan(chunk, carry)
+            return carry, hs
+        carry, hs = lax.scan(jax.checkpoint(body), carry0,
+                             (stack(q), stack(k), stack(v), stack(ig),
+                              stack(fg)))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    else:
+        h, carry = _mlstm_scan((q, k, v, ig, fg), carry0)
+        h = h.reshape(B, S, H, hd)
+
+    h = h.reshape(B, S, dims.inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = h.astype(dt) @ params["w_out"].astype(dt)
+    out = lc(out, "batch", None, None)
+    if return_state:
+        return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+    return out
+
+
+def init_mlstm_state(batch, dims: XLSTMDims):
+    H, hd = dims.n_heads, dims.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode(params, x, state, dims: XLSTMDims):
+    B = x.shape[0]
+    dt = x.dtype
+    proj = x @ params["w_in"].astype(dt)
+    xi, z = jnp.split(proj, 2, axis=-1)
+    H, hd = dims.n_heads, dims.head_dim
+    q = (xi @ params["wq"].astype(dt)).reshape(B, 1, H, hd).astype(jnp.float32)[:, 0]
+    k = (xi @ params["wk"].astype(dt)).reshape(B, 1, H, hd).astype(jnp.float32)[:, 0] / jnp.sqrt(hd)
+    v = (xi @ params["wv"].astype(dt)).reshape(B, 1, H, hd).astype(jnp.float32)[:, 0]
+    gates = (xi @ params["w_if"].astype(dt)).astype(jnp.float32)[:, 0]
+    ig = gates[:, :H]
+    fg = jax.nn.log_sigmoid(gates[:, H:] + params["f_bias"])
+    (C, n, m), h = _mlstm_step((state["C"], state["n"], state["m"]),
+                               (q, k, v, ig, fg))
+    h = h.reshape(B, 1, dims.inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = h.astype(dt) @ params["w_out"].astype(dt)
+    return lc(out, "batch", None, None), {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, dims: XLSTMDims, param_dtype):
+    ks = jax.random.split(key, 3)
+    d, H = dims.d, dims.n_heads
+    hd = d // H
+    return {
+        # input weights for (z, i, f, o) gates
+        "w_x": dense_init(ks[0], (d, 4 * d), param_dtype),
+        # per-head recurrent weights (block-diagonal as in the paper)
+        "r_h": dense_init(ks[1], (H, hd, 4 * hd), param_dtype, scale=0.1),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), param_dtype),
+    }
+
+
+def _slstm_step(params_f32, dims, carry, x_t):
+    """carry: (c, n, h, m) each (B, d); x_t: (B, 4d) pre-projected input."""
+    r_h, f_bias = params_f32
+    c, n, h, m = carry
+    B = c.shape[0]
+    H = dims.n_heads
+    hd = c.shape[1] // H
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhi,hij->bhj", hh, r_h).reshape(B, 4 * H * hd)
+    pre = x_t + rec
+    z_t, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    z_t = jnp.tanh(z_t)
+    o_t = jax.nn.sigmoid(o_t)
+    f_log = jax.nn.log_sigmoid(f_t + f_bias)
+    m_new = jnp.maximum(f_log + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c = f_p * c + i_p * z_t
+    n = f_p * n + i_p
+    h = o_t * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_train(params, x, dims: XLSTMDims, return_state: bool = False):
+    B, S, d = x.shape
+    dt = x.dtype
+    xp = (x @ params["w_x"].astype(dt)).astype(jnp.float32)
+    pf32 = (params["r_h"].astype(jnp.float32), params["f_bias"])
+    carry0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) \
+        + (jnp.full((B, d), -1e30, jnp.float32),)
+
+    n_chunks = max(1, S // dims.chunk)
+    step = lambda carry, xt: _slstm_step(pf32, dims, carry, xt)
+    if n_chunks > 1:
+        c = S // n_chunks
+        xc = jnp.moveaxis(xp.reshape(B, n_chunks, c, 4 * d), 1, 0)
+        def body(carry, chunk):
+            carry, hs = lax.scan(step, carry, jnp.moveaxis(chunk, 1, 0))
+            return carry, jnp.moveaxis(hs, 0, 1)
+        carry, hs = lax.scan(jax.checkpoint(body), carry0, xc)
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
+    else:
+        carry, hs = lax.scan(step, carry0, jnp.moveaxis(xp, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1)
+    out = h.astype(dt) @ params["w_out"].astype(dt)
+    out = lc(out, "batch", None, None)
+    if return_state:
+        return out, {"c": carry[0], "n": carry[1], "h": carry[2],
+                     "m": carry[3]}
+    return out
+
+
+def init_slstm_state(batch, d):
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(params, x, state, dims: XLSTMDims):
+    B = x.shape[0]
+    dt = x.dtype
+    xp = (x[:, 0] @ params["w_x"].astype(dt)).astype(jnp.float32)
+    pf32 = (params["r_h"].astype(jnp.float32), params["f_bias"])
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), h_t = _slstm_step(pf32, dims, carry, xp)
+    out = h_t[:, None].astype(dt) @ params["w_out"].astype(dt)
+    return lc(out, "batch", None, None), {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,130 @@
+"""Optimizers (pure-pytree, optax-free): AdamW and SGD-momentum, with
+global-norm clipping and LR schedules.  Optimizer state shards exactly like
+its parameter (the dry-run passes the param spec tree for both)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        step_v = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step_v + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (the paper's CNN training regime)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.01
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    clip_norm: float = 0.0
+
+
+def sgd_init(params):
+    return {"vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)}
+
+
+def sgd_update(params, grads, state, cfg: SGDConfig, lr_scale=1.0):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, v):
+        g = g + cfg.weight_decay * p.astype(jnp.float32)
+        v = cfg.momentum * v + g
+        return (p.astype(jnp.float32) - lr * v).astype(p.dtype), v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    out = [upd(p, g, v) for p, g, v in
+           zip(flat_p, jax.tree.leaves(grads), jax.tree.leaves(state["vel"]))]
+    return tdef.unflatten([o[0] for o in out]), \
+        {"vel": tdef.unflatten([o[1] for o in out])}, {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(step, *, warmup: int, total: int, floor: float = 0.1):
+    t = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(t / max(1, warmup), 1.0)
+    prog = jnp.clip((t - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def constant(step, **_):
+    return 1.0

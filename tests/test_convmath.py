@@ -1,0 +1,113 @@
+"""Unit + property tests for the interval algebra (paper Eqs. 11-15)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convmath import (
+    Geometry, backward_intervals, heights, interval_union, max_valid_rows,
+    overlap_rows, split_even, twophase_boundaries, validate_twophase,
+)
+
+GEOMS = st.tuples(st.integers(1, 7), st.integers(1, 3), st.integers(0, 3)) \
+    .map(lambda t: Geometry(k=t[0], s=t[1], p=min(t[2], t[0] - 1)))
+
+
+def test_out_size_matches_paper_formula():
+    g = Geometry(k=3, s=1, p=1)
+    assert g.out_size(224) == 224
+    g = Geometry(k=7, s=2, p=3)
+    assert g.out_size(224) == 112
+    g = Geometry(k=2, s=2, p=0)
+    assert g.out_size(224) == 112
+
+
+def test_eq11_row1_closure():
+    """Eq. (11): H_1^l = (H_1^{l+1} - 1) s + k - p for the first row."""
+    g = Geometry(k=3, s=1, p=1)
+    # row 1 needs rows [0, e) at the input; e = (H1^{l+1}-1)*s - p + k
+    iv = g.in_interval((0, 10), 100)
+    assert iv == (0, (10 - 1) * 1 - 1 + 3)
+
+
+def test_in_out_roundtrip():
+    g = Geometry(k=3, s=2, p=1)
+    h_in = 57
+    h_out = g.out_size(h_in)
+    for os_ in range(0, h_out, 3):
+        iv_in = g.in_interval((os_, h_out), h_in)
+        o = g.out_interval(iv_in, h_in)
+        assert o[0] <= os_ and o[1] == h_out
+
+
+@given(g=GEOMS, h=st.integers(16, 128), a=st.integers(0, 8),
+       n=st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_out_interval_computable(g, h, a, n):
+    """Whatever in_interval says is needed must suffice to compute the
+    requested outputs under semi-closed padding."""
+    try:
+        h_out = g.out_size(h)
+    except ValueError:
+        return
+    os_ = min(a, h_out - 1)
+    oe = min(os_ + n, h_out)
+    iv = g.in_interval((os_, oe), h)
+    got = g.out_interval(iv, h)
+    assert got[0] <= os_ and got[1] >= oe
+
+
+@given(h=st.integers(1, 512), n=st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_split_even_partition(h, n):
+    if n > h:
+        with pytest.raises(ValueError):
+            split_even(h, n)
+        return
+    ivs = split_even(h, n)
+    assert ivs[0][0] == 0 and ivs[-1][1] == h
+    sizes = [b - a for a, b in ivs]
+    assert max(sizes) - min(sizes) <= 1
+    for (a1, b1), (a2, b2) in zip(ivs, ivs[1:]):
+        assert b1 == a2
+
+
+VGG_GEOMS = [Geometry(3, 1, 1)] * 2 + [Geometry(2, 2, 0)] \
+    + [Geometry(3, 1, 1)] * 2 + [Geometry(2, 2, 0)]
+
+
+def test_twophase_boundaries_cover():
+    bounds = twophase_boundaries(VGG_GEOMS, 64, 4)
+    hs = heights(VGG_GEOMS, 64)
+    for l, col in enumerate(bounds):
+        assert col[0] == 0 and col[-1] == hs[l]
+        assert all(col[r] <= col[r + 1] for r in range(len(col) - 1))
+
+
+def test_twophase_validity_bound():
+    n = max_valid_rows(VGG_GEOMS, 64)
+    assert n >= 2
+    assert validate_twophase(VGG_GEOMS, 64, n)
+
+
+@given(h=st.integers(32, 256), n=st.integers(2, 6))
+@settings(max_examples=100, deadline=None)
+def test_backward_intervals_monotone(h, n):
+    """Receptive-field closure (OverL) intervals grow monotonically toward
+    the input and nest across adjacent rows."""
+    hs = heights(VGG_GEOMS, h)
+    if hs[-1] < n:
+        return
+    rows = split_even(hs[-1], n)
+    chains = [backward_intervals(VGG_GEOMS, h, iv) for iv in rows]
+    for c1, c2 in zip(chains, chains[1:]):
+        for l in range(len(c1)):
+            assert c1[l][0] <= c2[l][0]  # ordered starts
+            assert c1[l][1] <= c2[l][1]  # ordered ends
+
+
+def test_overlap_rows_eq15():
+    """Overlap volume recursion: for k=3,s=1 chains, o grows by (k-s) per
+    layer going down."""
+    geoms = [Geometry(3, 1, 0)] * 3
+    o = overlap_rows(geoms, 64, boundary_l=5)
+    assert o[-1] <= o[0]  # grows toward the input

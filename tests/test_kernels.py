@@ -1,0 +1,106 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
+(interpret=True executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.conv2d_rows import good_tiling, vmem_bytes
+
+KEY = jax.random.PRNGKey(0)
+
+CONV_CASES = [
+    # (H, W, Cin, Cout, k, s, p, block_h)
+    (16, 16, 8, 16, 3, 1, 1, 4),
+    (17, 13, 4, 8, 3, 1, 0, 8),
+    (32, 32, 8, 8, 5, 1, 2, 8),
+    (16, 16, 8, 16, 3, 2, 1, 4),
+    (24, 24, 4, 8, 7, 2, 3, 4),
+    (14, 14, 16, 32, 1, 1, 0, 8),
+    (9, 9, 3, 4, 3, 1, 1, 2),   # odd sizes
+    (64, 8, 4, 4, 3, 1, 1, 16),  # tall skinny
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d_rows_allclose(case, dtype):
+    H, W, Cin, Cout, k, s, p, bh = case
+    x = jax.random.normal(KEY, (2, H, W, Cin)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (k, k, Cin, Cout))
+         * 0.1).astype(dtype)
+    got = ops.conv2d(x, w, stride=s, padding=p, block_h=bh)
+    want = ref.conv2d_ref(x, w, stride=s, padding=p)
+    assert got.shape == want.shape
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    assert jnp.allclose(got.astype(jnp.float32), want.astype(jnp.float32),
+                        atol=tol, rtol=tol), float(
+        jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)).max())
+
+
+SWA_CASES = [
+    # (S, D, window, bq, bk)
+    (256, 64, 64, 64, 32),
+    (256, 64, 0, 128, 64),     # full causal
+    (512, 32, 128, 128, 128),
+    (256, 64, 100, 64, 32),    # window not block-aligned
+    (128, 128, 32, 32, 32),
+    (128, 64, 200, 64, 64),    # window > S
+]
+
+
+@pytest.mark.parametrize("case", SWA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_allclose(case, dtype):
+    S, D, window, bq, bk = case
+    q = jax.random.normal(KEY, (2, 2, S, D)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 2, S, D)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 2, S, D)).astype(dtype)
+    got = ops.swa_attention(q, k, v, window=window, bq=bq, bk=bk)
+    want = ref.swa_attention_ref(q, k, v, window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert jnp.allclose(got.astype(jnp.float32), want.astype(jnp.float32),
+                        atol=tol, rtol=tol)
+
+
+SSD_CASES = [
+    # (Bt, S, H, P, N, chunk)
+    (2, 64, 4, 16, 8, 16),
+    (1, 128, 2, 8, 4, 32),
+    (2, 32, 4, 16, 8, 32),   # single chunk
+    (1, 64, 8, 8, 16, 8),    # many heads, tiny chunk
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_allclose(case):
+    Bt, S, H, P, N, chunk = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P)) * 0.5
+    B = jax.random.normal(ks[1], (Bt, S, N)) * 0.5
+    C = jax.random.normal(ks[2], (Bt, S, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bt, S, H)))
+    a = jnp.exp(-dt * jnp.exp(jax.random.normal(ks[4], (Bt, S, H)) * 0.1))
+    got = ops.ssd_scan(x, B, C, a, dt, chunk=chunk)
+    want, _ = ref.ssd_scan_ref(x, B, C, a, dt)
+    assert jnp.allclose(got, want, atol=1e-3), float(
+        jnp.abs(got - want).max())
+
+
+def test_ssd_vmem_budget():
+    from repro.kernels.ssd_chunk import vmem_bytes as ssd_vmem
+    assert ssd_vmem(128, 8, 64, 64) < 16 * 2**20
+
+
+def test_vmem_budget():
+    """The default tiling's working set must fit a 16 MiB VMEM target for
+    paper-scale layers (224x224x64, 3x3)."""
+    b = vmem_bytes(block_h=8, stride=1, w_in=224, cin=64, w_out=224,
+                   cout=64, kh=3, kw=3)
+    assert b < 16 * 2**20, b
+
+
+def test_mxu_alignment_helper():
+    assert good_tiling(64, 128)
+    assert not good_tiling(3, 64)

@@ -1,0 +1,153 @@
+"""MoE routing invariants + SSM/xLSTM recurrence exactness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import ssd_scan_ref
+from repro.models.lm.moe import MoEDims, init_moe, moe_apply
+from repro.models.lm.ssm import SSMDims, init_ssm, init_ssm_state, \
+    ssm_decode, ssm_train
+from repro.models.lm.xlstm import (
+    XLSTMDims, init_mlstm, init_mlstm_state, init_slstm, init_slstm_state,
+    mlstm_decode, mlstm_train, slstm_decode, slstm_train,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------- MoE ------------------------------------------
+
+
+def test_moe_forward_finite_and_balanced_aux():
+    dims = MoEDims(d=32, d_expert=64, n_experts=4, top_k=2, seq_groups=2)
+    p = init_moe(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, aux = moe_apply(p, x, dims)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # Switch LB loss >= 1 (equality at perfect balance)
+    assert float(aux["load_balance"]) >= 0.99
+
+
+def test_moe_shared_experts_add():
+    dims = MoEDims(d=32, d_expert=64, n_experts=4, top_k=2, n_shared=1,
+                   seq_groups=2)
+    p = init_moe(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, _ = moe_apply(p, x, dims)
+    # zeroing shared weights must change the output
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y2, _ = moe_apply(p2, x, dims)
+    assert float(jnp.abs(y - y2).max()) > 1e-4
+
+
+def test_moe_capacity_drops_dont_nan():
+    dims = MoEDims(d=16, d_expert=16, n_experts=4, top_k=2,
+                   capacity_factor=0.25, seq_groups=1)  # aggressive drops
+    p = init_moe(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 16))
+    y, _ = moe_apply(p, x, dims)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_moe_grad_finite(seed):
+    dims = MoEDims(d=16, d_expert=16, n_experts=4, top_k=2, seq_groups=2)
+    p = init_moe(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, 16))
+
+    def loss(p):
+        y, aux = moe_apply(p, x, dims)
+        return jnp.sum(y ** 2) + aux["load_balance"]
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# --------------------------- Mamba2 SSD -----------------------------------
+
+
+def _ssm_setup(S=64):
+    dims = SSMDims(d=32, n_heads=4, head_p=16, state_n=8, chunk=16)
+    p = init_ssm(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, 32)) * 0.5
+    return dims, p, x
+
+
+def test_ssd_chunked_equals_sequential_ref():
+    """The chunked SSD (2PS carried-state) must equal the naive sequential
+    scan — LR-CNN exactness on the SSM family."""
+    import repro.models.lm.ssm as ssm_mod
+    dims, p, x = _ssm_setup()
+    # extract the internals the same way ssm_train does
+    Bt, S, d = x.shape
+    proj = x @ p["w_in"]
+    xs, z, B, C, dtp = ssm_mod._split_proj(proj, dims)
+    conv_out, _ = ssm_mod._causal_conv(
+        jnp.concatenate([xs, B, C], axis=-1), p["conv_w"])
+    xs = conv_out[..., :dims.inner]
+    B_ = conv_out[..., dims.inner:dims.inner + dims.state_n]
+    C_ = conv_out[..., dims.inner + dims.state_n:]
+    xh = xs.reshape(Bt, S, dims.n_heads, dims.head_p)
+    dt = jax.nn.softplus(dtp + p["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(p["a_log"]))
+    y_ref, h_ref = ssd_scan_ref(xh, B_, C_, a, dt)
+    y_chunk, h_chunk = ssm_mod._ssd_chunk(
+        xh, B_, C_, a, dt, jnp.zeros((Bt, dims.n_heads, dims.head_p,
+                                      dims.state_n)), dims)
+    assert jnp.allclose(y_chunk, y_ref, atol=1e-4)
+    assert jnp.allclose(h_chunk, h_ref, atol=1e-4)
+
+
+def test_ssm_train_decode_consistency():
+    """Prefill state + decode step == train forward at the next position."""
+    dims, p, x = _ssm_setup(S=32)
+    y_all = ssm_train(p, x, dims)
+    y_pre, state = ssm_train(p, x[:, :-1], dims, return_state=True)
+    y_dec, _ = ssm_decode(p, x[:, -1:], state, dims)
+    assert jnp.allclose(y_dec[:, 0], y_all[:, -1], atol=1e-3)
+
+
+def test_ssm_chunk_count_invariance():
+    dims, p, x = _ssm_setup(S=64)
+    y1 = ssm_train(p, x, dims)
+    dims2 = SSMDims(d=32, n_heads=4, head_p=16, state_n=8, chunk=64)
+    y2 = ssm_train(p, x, dims2)
+    assert jnp.allclose(y1, y2, atol=1e-4)
+
+
+# --------------------------- xLSTM ----------------------------------------
+
+
+def test_mlstm_train_decode_consistency():
+    dims = XLSTMDims(d=32, n_heads=4, expand=2, chunk=8)
+    p = init_mlstm(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    y_all = mlstm_train(p, x, dims)
+    _, state = mlstm_train(p, x[:, :-1], dims, return_state=True)
+    y_dec, _ = mlstm_decode(p, x[:, -1:], state, dims)
+    assert jnp.allclose(y_dec[:, 0], y_all[:, -1], atol=1e-3)
+
+
+def test_slstm_train_decode_consistency():
+    dims = XLSTMDims(d=32, n_heads=4, chunk=8)
+    p = init_slstm(KEY, dims, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    y_all = slstm_train(p, x, dims)
+    _, state = slstm_train(p, x[:, :-1], dims, return_state=True)
+    y_dec, _ = slstm_decode(p, x[:, -1:], state, dims)
+    assert jnp.allclose(y_dec[:, 0], y_all[:, -1], atol=1e-3)
+
+
+def test_mlstm_chunk_invariance():
+    dims8 = XLSTMDims(d=32, n_heads=4, expand=2, chunk=8)
+    dims16 = XLSTMDims(d=32, n_heads=4, expand=2, chunk=16)
+    p = init_mlstm(KEY, dims8, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    assert jnp.allclose(mlstm_train(p, x, dims8), mlstm_train(p, x, dims16),
+                        atol=1e-4)

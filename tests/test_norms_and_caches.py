@@ -1,0 +1,94 @@
+"""BatchNorm moment-merging exactness (the row-mode BN policy), ring-buffer
+cache semantics, and attention mask properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.cnn.layers import batch_moments, merge_moments
+from repro.models.lm.attention import (
+    AttnDims, attn_decode, attn_prefill, init_attn, init_cache,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@given(n_rows=st.integers(2, 5), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_merged_moments_exact(n_rows, seed):
+    """Chan's merge over per-row moments == global batch moments — the
+    row-mode BN running-stat update is exact (DESIGN.md §2)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 12 * n_rows, 6, 3))
+    rows = jnp.split(x, n_rows, axis=1)
+    mean, var = merge_moments(*[batch_moments(r) for r in rows])
+    g_mean = jnp.mean(x, axis=(0, 1, 2))
+    g_var = jnp.var(x, axis=(0, 1, 2))
+    assert jnp.allclose(mean, g_mean, atol=1e-5)
+    assert jnp.allclose(var, g_var, atol=1e-4)
+
+
+def _dims(window=0):
+    return AttnDims(d=32, n_heads=4, n_kv=2, head_dim=8, window=window)
+
+
+def test_ring_cache_equals_full_cache_within_window():
+    """Decoding with a window-sized ring buffer must match decoding with a
+    full-length cache under the same sliding-window mask."""
+    window = 8
+    dims = _dims(window)
+    params = init_attn(KEY, dims, jnp.float32)
+    B, P, G = 1, 6, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, P, 32)) * 0.5
+
+    y_full, cache_full = attn_prefill(params, x, dims, cache_len=P + G)
+    y_ring, cache_ring = attn_prefill(params, x, dims, cache_len=window,
+                                      ring=True)
+    assert jnp.allclose(y_full, y_ring, atol=1e-5)
+
+    for t in range(G):
+        xt = jax.random.normal(jax.random.PRNGKey(10 + t), (B, 1, 32)) * 0.5
+        o_full, cache_full = attn_decode(params, xt, cache_full, dims)
+        o_ring, cache_ring = attn_decode(params, xt, cache_ring, dims)
+        assert jnp.allclose(o_full, o_ring, atol=1e-4), t
+
+
+def test_window_limits_attention_reach():
+    """A token outside the window must not influence the output."""
+    window = 4
+    dims = _dims(window)
+    params = init_attn(KEY, dims, jnp.float32)
+    from repro.models.lm.attention import attn_train
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32)) * 0.5
+    y1 = attn_train(params, x, dims)
+    x2 = x.at[:, 0].set(x[:, 0] + 10.0)  # perturb a token far in the past
+    y2 = attn_train(params, x2, dims)
+    # positions >= window past the perturbation are unaffected
+    assert jnp.allclose(y1[:, 6:], y2[:, 6:], atol=1e-5)
+    # but nearby positions are
+    assert float(jnp.abs(y1[:, 0] - y2[:, 0]).max()) > 1e-3
+
+
+def test_causality():
+    dims = _dims(0)
+    params = init_attn(KEY, dims, jnp.float32)
+    from repro.models.lm.attention import attn_train
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 10, 32)) * 0.5
+    y1 = attn_train(params, x, dims)
+    x2 = x.at[:, -1].set(0.0)  # change the FUTURE
+    y2 = attn_train(params, x2, dims)
+    assert jnp.allclose(y1[:, :-1], y2[:, :-1], atol=1e-6)
+
+
+def test_query_chunking_invariance_attention():
+    """Row-centric query chunking must not change attention outputs."""
+    for window in (0, 4):
+        dims = _dims(window)
+        params = init_attn(KEY, dims, jnp.float32)
+        from repro.models.lm.attention import attn_train
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+        ref = attn_train(params, x, dims, n_chunks=1)
+        for nc in (2, 4, 8):
+            got = attn_train(params, x, dims, n_chunks=nc)
+            assert jnp.allclose(got, ref, atol=1e-5), (window, nc)

@@ -1,0 +1,76 @@
+"""Memory model (Eqs. 3, 6-10, 12, 16) and N solvers."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rowplan import (
+    estimate_bytes, feature_bytes, largest_batch, omega_bp, omega_column,
+    omega_fp, overlap_halo_bytes, solve_n, twophase_cache_bytes,
+)
+from repro.models.cnn.layers import init_trunk
+from repro.models.cnn.vgg import vgg16_modules
+
+MODS = vgg16_modules(width_mult=0.25, n_stages=3)
+SHAPE = (96, 96, 3)
+
+
+def test_eq3_column_volume():
+    rho = feature_bytes(MODS, SHAPE, batch=4)
+    assert omega_column(MODS, SHAPE, 4) == sum(rho)
+    # linear in batch (paper Sec. II-B)
+    assert omega_column(MODS, SHAPE, 8) == 2 * omega_column(MODS, SHAPE, 4)
+
+
+def test_fp_lt_bp_lt_column():
+    """Ω_FP(N) <= Ω_BP(N) <= Ω (the paper's ordering for N > 1)."""
+    for n in (2, 4, 8):
+        fp = omega_fp(MODS, SHAPE, 4, n)
+        bp = omega_bp(MODS, SHAPE, 4, n)
+        col = omega_column(MODS, SHAPE, 4)
+        assert fp <= bp <= col
+
+
+@given(n=st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+def test_bp_monotone_in_n(n):
+    if n > 1:
+        assert omega_bp(MODS, SHAPE, 4, n) <= omega_bp(MODS, SHAPE, 4, n - 1)
+
+
+def test_cache_and_halo_grow_with_n():
+    tp2 = twophase_cache_bytes(MODS, SHAPE, 4, 2)
+    tp3 = twophase_cache_bytes(MODS, SHAPE, 4, 3)
+    assert tp3 >= tp2 > 0
+    ov2 = overlap_halo_bytes(MODS, SHAPE, 4, 2)
+    ov3 = overlap_halo_bytes(MODS, SHAPE, 4, 3)
+    assert ov3 >= ov2 > 0
+
+
+def test_solver_feasibility():
+    col = omega_column(MODS, SHAPE, 4)
+    # generous budget: N=1 feasible
+    r = solve_n(MODS, SHAPE, 4, budget=col * 2, strategy="overlap")
+    assert r.feasible and r.n_rows == 1
+    # tight budget: needs N > 1
+    r = solve_n(MODS, SHAPE, 4, budget=int(col * 0.5), strategy="overlap")
+    assert r.feasible and r.n_rows > 1
+    r2 = solve_n(MODS, SHAPE, 4, budget=int(col * 0.5), strategy="twophase")
+    assert r2.feasible and r2.n_rows > 1
+
+
+def test_largest_batch_monotone_in_budget():
+    b1, _ = largest_batch(MODS, SHAPE, budget=2 * 10**8, strategy="overlap",
+                          b_max=256)
+    b2, _ = largest_batch(MODS, SHAPE, budget=4 * 10**8, strategy="overlap",
+                          b_max=256)
+    assert b2 >= b1 > 0
+
+
+def test_row_strategies_beat_base():
+    """The paper's headline: row-centric fits a larger batch than Base."""
+    budget = 3 * 10**8
+    b_base, _ = largest_batch(MODS, SHAPE, budget, "base", b_max=512)
+    b_ov, _ = largest_batch(MODS, SHAPE, budget, "overlap", b_max=512)
+    b_tp, _ = largest_batch(MODS, SHAPE, budget, "twophase", b_max=512)
+    assert b_ov > b_base
+    assert b_tp > b_base

@@ -1,0 +1,87 @@
+"""Sequence-axis row-centric helpers (core/seqrow.py): exactness of the
+transplanted 2PS/OverL patterns."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.seqrow import carry_scan_remat, chunked_apply, swa_overlap_chunks
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_chunked_apply_exact():
+    x = jax.random.normal(KEY, (2, 32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    fn = lambda u: jax.nn.gelu(u @ w)
+    ref = fn(x)
+    for n in (1, 2, 4, 8):
+        got = chunked_apply(fn, x, n)
+        assert jnp.allclose(got, ref, atol=1e-6), n
+
+
+def test_chunked_apply_grads_exact():
+    x = jax.random.normal(KEY, (2, 32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+
+    def loss(w, chunked):
+        fn = lambda u: jnp.tanh(u @ w)
+        y = chunked_apply(fn, x, 4) if chunked else fn(x)
+        return jnp.sum(y ** 2)
+
+    g1 = jax.grad(loss)(w, False)
+    g2 = jax.grad(loss)(w, True)
+    assert jnp.allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_carry_scan_matches_unchunked():
+    """EMA recurrence: chunked carry scan == plain scan (2PS exactness)."""
+    x = jax.random.normal(KEY, (2, 32, 8))
+
+    def body(carry, chunk):  # chunk: (B, c, D)
+        def step(c, xt):
+            c = 0.9 * c + 0.1 * xt
+            return c, c
+        carry, ys = jax.lax.scan(step, carry, jnp.moveaxis(chunk, 1, 0))
+        return carry, jnp.moveaxis(ys, 0, 1)
+
+    c0 = jnp.zeros((2, 8))
+    ref_c, ref = body(c0, x)
+    for n in (2, 4):
+        got_c, got = carry_scan_remat(body, c0, x, n)
+        assert jnp.allclose(got, ref, atol=1e-6)
+        assert jnp.allclose(got_c, ref_c, atol=1e-6)
+
+
+def _ref_swa(q, k, v, window):
+    S = q.shape[1]
+    d = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(d)
+    qp = jnp.arange(S)
+    ok = (qp[None, :] <= qp[:, None]) & (qp[None, :] > qp[:, None] - window)
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def test_swa_overlap_chunks_exact():
+    B, S, H, D = 2, 64, 2, 16
+    window = 16
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+
+    def attend(qc, kc, vc, q_offset, k_offset):
+        d = qc.shape[-1]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) / jnp.sqrt(d)
+        qp = q_offset + jnp.arange(qc.shape[1])
+        kp = k_offset + jnp.arange(kc.shape[1])
+        ok = (kp[None, :] <= qp[:, None]) & (kp[None, :] > qp[:, None] - window) \
+            & (kp[None, :] >= 0)
+        s = jnp.where(ok[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vc)
+
+    ref = _ref_swa(q, k, v, window)
+    for n in (2, 4):
+        got = swa_overlap_chunks(attend, q, k, v, window, n)
+        assert jnp.allclose(got, ref, atol=1e-5), n

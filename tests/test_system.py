@@ -1,0 +1,146 @@
+"""End-to-end behaviour tests: training convergence under row-centric
+execution (the paper's Fig. 11 claim, in miniature), serving loop, and the
+compiled-memory ordering that is the paper's core value proposition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hybrid import make_strategy_apply
+from repro.core.overlap import make_column_apply
+from repro.data.pipeline import ImageDataset, ImageDatasetConfig, \
+    TokenDataset, TokenDatasetConfig
+from repro.models.cnn.vgg import head_apply, init_vgg16
+from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
+
+
+def _train_cnn(strategy, n_rows, steps=40, image=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    mods, params = init_vgg16(key, (image, image, 3), width_mult=0.25,
+                              n_classes=4, n_stages=2)
+    trunk = make_strategy_apply(mods, image, strategy, n_rows)
+
+    def loss_fn(p, images, labels):
+        logits = head_apply(p["head"], trunk(p["trunk"], images))
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+    opt = sgd_init(params)
+    cfg = SGDConfig(lr=0.05, weight_decay=0.0)
+
+    @jax.jit
+    def step(p, opt, images, labels):
+        loss, g = jax.value_and_grad(loss_fn)(p, images, labels)
+        p, opt, _ = sgd_update(p, g, opt, cfg)
+        return p, opt, loss
+
+    ds = ImageDataset(ImageDatasetConfig(h=image, w=image, n_classes=4,
+                                         batch=16, seed=seed))
+    losses = []
+    for i in range(steps):
+        b = ds.batch_at(i)
+        params, opt, loss = step(params, opt, jnp.asarray(b["images"]),
+                                 jnp.asarray(b["labels"]))
+        losses.append(float(loss))
+    return losses
+
+
+def test_row_centric_training_converges_like_base():
+    """Fig. 11: 2PS/OverL loss trajectories match Base step-for-step
+    (identical gradients => identical trajectory)."""
+    base = _train_cnn("base", 1)
+    ovl = _train_cnn("overlap", 2)
+    tps = _train_cnn("twophase", 2)
+    assert base[-1] < base[0] * 0.7  # actually learns
+    np.testing.assert_allclose(ovl, base, rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(tps, base, rtol=2e-2, atol=2e-2)
+
+
+def test_lm_training_reduces_loss():
+    from repro.configs import get_reduced
+    from repro.models.lm import model as LM
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+    cfg = get_reduced("llama3_2_3b")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.0)
+    # bigram-permutation stream (n_gram=1): learnable by a tiny LM fast
+    ds = TokenDataset(TokenDatasetConfig(vocab=cfg.vocab, seq_len=32,
+                                         batch=8, seed=0, noise_p=0.02,
+                                         n_gram=1))
+
+    @jax.jit
+    def step(p, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda q: LM.lm_loss(q, batch, cfg), has_aux=True)(p)
+        p, opt, _ = adamw_update(p, g, opt, ocfg)
+        return p, opt, loss
+
+    losses = []
+    for i in range(30):
+        hb = ds.batch_at(i)
+        batch = {"tokens": jnp.asarray(hb["tokens"]),
+                 "labels": jnp.asarray(hb["labels"])}
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_compiled_memory_ordering():
+    """The paper's memory claim, measured where the CPU XLA backend's
+    buffer accounting is structurally reliable (loop-based remat; see
+    EXPERIMENTS.md §Paper-validation for the unrolled-row caveat):
+
+    1. analytic model: Ω_BP(N) < Ω (Eq. 8 vs Eq. 3) — exact;
+    2. measured: sequence-row remat (the LM-side transplant) cuts the
+       compiled temp bytes of a grad step by >2x.
+    """
+    from repro.core.rowplan import omega_bp, omega_column
+    from repro.models.cnn.vgg import vgg16_modules
+    mods = vgg16_modules(width_mult=0.25, n_stages=2)
+    shape = (192, 192, 3)
+    assert omega_bp(mods, shape, 16, 8) < 0.3 * omega_column(mods, shape, 16)
+
+    # measured, scan-structured: reduced LM grad step with/without row remat
+    from repro.configs import get_reduced
+    from repro.models.lm import model as LM
+    base_cfg = get_reduced("llama3_2_3b")
+    toks = jax.ShapeDtypeStruct((4, 256), jnp.int32)
+
+    def temp(cfg):
+        p = jax.eval_shape(lambda k: LM.init_lm(k, cfg),
+                           jax.random.PRNGKey(0))
+
+        def loss(pp, t):
+            return LM.lm_loss(pp, {"tokens": t, "labels": t}, cfg)[0]
+
+        c = jax.jit(jax.grad(loss)).lower(p, toks).compile()
+        return c.memory_analysis().temp_size_in_bytes
+
+    import dataclasses
+    none = temp(dataclasses.replace(base_cfg, row_chunks=1, remat="none"))
+    rows = temp(dataclasses.replace(base_cfg, row_chunks=4, remat="rows"))
+    assert rows < 0.6 * none, (rows, none)
+
+
+def test_serve_generates():
+    from repro.configs import get_reduced
+    from repro.models.lm import model as LM
+
+    cfg = get_reduced("gemma3_4b")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 16)), jnp.int32)
+    logits, caches = LM.lm_prefill(params, {"tokens": toks}, cfg, 32)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    decode = jax.jit(lambda p, t, c: LM.lm_decode(p, t, c, cfg))
+    for _ in range(8):
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        outs.append(tok)
+    gen = jnp.concatenate(outs, axis=1)
+    assert gen.shape == (2, 9)
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab)))
