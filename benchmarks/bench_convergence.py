@@ -9,8 +9,8 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid import make_strategy_apply
 from repro.core.overlap import make_splitcnn_apply
+from repro.exec import ExecutionPlan, build_apply
 from repro.data.pipeline import ImageDataset, ImageDatasetConfig
 from repro.models.cnn.vgg import head_apply, init_vgg16
 from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
@@ -51,9 +51,11 @@ def _train(trunk_fn, seed=0):
 
 
 def run() -> List[dict]:
-    base = _train(lambda mods: make_strategy_apply(mods, IMAGE, "base"))
-    with_sharing = _train(
-        lambda mods: make_strategy_apply(mods, IMAGE, "twophase", 2))
+    shape = (IMAGE, IMAGE, 3)
+    base = _train(lambda mods: build_apply(
+        mods, ExecutionPlan.explicit("base", 1, shape)))
+    with_sharing = _train(lambda mods: build_apply(
+        mods, ExecutionPlan.explicit("twophase", 2, shape)))
     broken = _train(lambda mods: make_splitcnn_apply(mods, IMAGE, 2))
     dev_ok = max(abs(a - b) for a, b in zip(base, with_sharing))
     dev_broken = max(abs(a - b) for a, b in zip(base, broken))

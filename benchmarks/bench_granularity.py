@@ -11,8 +11,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import compiled_temp_bytes, time_fn
 from repro.core import rowplan
-from repro.core.hybrid import make_strategy_apply
 from repro.core.overlap import plan_overlap
+from repro.exec import ExecutionPlan, build_apply
 from repro.core.twophase import max_valid_rows, module_boundaries
 from repro.models.cnn.vgg import head_apply, init_vgg16
 
@@ -38,8 +38,8 @@ def run() -> List[dict]:
                              "n_max": n_max_2ps})
                 continue
             use_n = n
-            trunk = make_strategy_apply(mods, IMAGE,
-                                        strat if n > 1 else "base", use_n)
+            trunk = build_apply(mods, ExecutionPlan.explicit(
+                strat if n > 1 else "base", use_n, shape))
 
             def loss(p, x, trunk=trunk):
                 return jnp.sum(head_apply(p["head"],

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import compiled_temp_bytes
 from repro.core import rowplan
-from repro.core.hybrid import auto_segments, make_strategy_apply
+from repro.core.hybrid import auto_segments
+from repro.exec import ExecutionPlan, build_apply
 from repro.models.cnn.resnet import resnet50_modules
 from repro.models.cnn.vgg import head_apply, init_vgg16, vgg16_modules
 
@@ -113,7 +114,8 @@ def run() -> List[dict]:
     n2ps = max_valid_rows(mods, image)
     for strat, n in [("base", 1), ("ckp", 1), ("twophase", n2ps),
                      ("overlap", 4), ("twophase_h", 3), ("overlap_h", 4)]:
-        trunk = make_strategy_apply(mods, image, strat, n)
+        trunk = build_apply(mods, ExecutionPlan.explicit(
+            strat, n, (image, image, 3)))
 
         def loss(p, x, trunk=trunk):
             return jnp.sum(head_apply(p["head"], trunk(p["trunk"], x)) ** 2)

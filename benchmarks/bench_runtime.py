@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn
-from repro.core.hybrid import make_strategy_apply
+from repro.exec import ExecutionPlan, build_apply
 from repro.models.cnn.vgg import head_apply, init_vgg16
 
 IMAGE = 64
@@ -26,10 +26,11 @@ def run() -> List[dict]:
     base_us = None
     from repro.core.twophase import max_valid_rows
     n2ps = max_valid_rows(mods, IMAGE)
+    shape = (IMAGE, IMAGE, 3)
     for strat, n in [("base", 1), ("ckp", 1), ("overlap", 4),
                      ("twophase", n2ps), ("overlap_h", 4),
                      ("twophase_h", 3)]:
-        trunk = make_strategy_apply(mods, IMAGE, strat, n)
+        trunk = build_apply(mods, ExecutionPlan.explicit(strat, n, shape))
 
         def loss(p, x, trunk=trunk):
             return jnp.sum(head_apply(p["head"], trunk(p["trunk"], x)) ** 2)

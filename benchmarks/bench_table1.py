@@ -7,8 +7,8 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.core.hybrid import auto_segments, max_rows_per_segment
 from repro.core.twophase import max_valid_rows
+from repro.exec import segment_row_capacity
 from repro.models.cnn.resnet import resnet50_modules
 from repro.models.cnn.vgg import vgg16_modules
 
@@ -26,16 +26,16 @@ def run() -> List[dict]:
         cap_ov = min(64, IMAGE // 8)
         rows.append({"name": f"table1/{arch}/OverL",
                      "layers_rowcentric": len(mods), "total_rows": cap_ov})
-        # hybrid: per-segment caps
-        segs = auto_segments(len(mods))
-        caps_tp = max_rows_per_segment(mods, IMAGE, segs, "twophase")
-        caps_ov = max_rows_per_segment(mods, IMAGE, segs, "overlap")
+        # hybrid: per-segment caps, read off the plan-shaped triples
+        caps_tp = segment_row_capacity(mods, IMAGE, "twophase")
+        caps_ov = segment_row_capacity(mods, IMAGE, "overlap")
         rows.append({"name": f"table1/{arch}/2PS-H",
                      "layers_rowcentric": len(mods),
-                     "total_rows": sum(caps_tp),
-                     "n_segments": len(segs)})
+                     "total_rows": sum(cap for _, _, cap in caps_tp),
+                     "n_segments": len(caps_tp)})
         rows.append({"name": f"table1/{arch}/OverL-H",
                      "layers_rowcentric": len(mods),
-                     "total_rows": sum(min(c, 64) for c in caps_ov),
-                     "n_segments": len(segs)})
+                     "total_rows": sum(min(cap, 64)
+                                       for _, _, cap in caps_ov),
+                     "n_segments": len(caps_ov)})
     return rows

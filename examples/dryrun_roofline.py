@@ -4,8 +4,8 @@ Lowers the real multi-pod step on 512 placeholder devices and prints the
 three roofline terms.  (The full 10x4x2 sweep is
 ``python -m repro.launch.dryrun``.)
 
-  PYTHONPATH=src python examples/dryrun_roofline.py --arch gemma3_4b \
-      --shape long_500k
+  python examples/dryrun_roofline.py --arch gemma3_4b --shape long_500k
+  (pip install -e . first, or prefix with PYTHONPATH=src)
 """
 
 # Must precede ANY jax import (device count locks at first init).
@@ -14,9 +14,6 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512").strip()
 
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 
 def main():

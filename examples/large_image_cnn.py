@@ -4,19 +4,16 @@ training. This example uses the rowplan solver to show the feasibility
 frontier, then actually runs row-centric training steps at a resolution
 where the column-centric plan does not fit the budget.
 
-  PYTHONPATH=src python examples/large_image_cnn.py
+  pip install -e . && python examples/large_image_cnn.py
+  (or without installing: PYTHONPATH=src python examples/large_image_cnn.py)
 """
-
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid import make_strategy_apply
 from repro.core.rowplan import omega_column, solve_n
 from repro.core.twophase import max_valid_rows
+from repro.exec import ExecutionPlan, build_apply
 from repro.models.cnn.vgg import head_apply, init_vgg16, vgg16_modules
 from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
 
@@ -52,7 +49,8 @@ def main():
     key = jax.random.PRNGKey(0)
     _, params = init_vgg16(key, (H, H, 3), width_mult=0.25, n_classes=4,
                            n_stages=3)
-    trunk = make_strategy_apply(mods, H, "twophase", n)
+    trunk = build_apply(mods, ExecutionPlan.explicit("twophase", n,
+                                                     (H, H, 3)))
     opt = sgd_init(params)
     cfg = SGDConfig(lr=0.05)
 

@@ -1,49 +1,55 @@
-"""Quickstart: train a small CNN with LR-CNN row-centric execution and
-verify the three headline properties in ~a minute on CPU:
+"""Quickstart: train a small CNN with LR-CNN row-centric execution through
+the `repro.exec` Plan/Engine API and verify the headline properties in
+~a minute on CPU:
 
-1. row-centric forward == column-centric forward (bit-exact);
-2. gradients match => training trajectories match (Fig. 11);
-3. compiled peak temp memory is lower (the paper's whole point).
+1. budget-driven planning: ``Planner.for_budget`` picks strategy and
+   granularity N under a byte budget (Eqs. 7-16) and returns a
+   serializable ``ExecutionPlan``;
+2. row-centric forward == column-centric forward (bit-exact), engines
+   built uniformly via ``build_apply(modules, plan)``;
+3. gradients match => training trajectories match (Fig. 11);
+4. compiled peak temp memory is lower (the paper's whole point).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  pip install -e .  &&  python examples/quickstart.py
+      (or without installing: PYTHONPATH=src python examples/quickstart.py)
 """
-
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid import make_strategy_apply
-from repro.core.rowplan import estimate_bytes, solve_n  # noqa: F401
+from repro.core.rowplan import estimate_bytes
 from repro.data.pipeline import ImageDataset, ImageDatasetConfig
+from repro.exec import ExecutionPlan, Planner, build_apply
 from repro.models.cnn.vgg import head_apply, init_vgg16
 from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
 
 IMAGE, BATCH = 64, 8
+SHAPE = (IMAGE, IMAGE, 3)
 
 
 def main():
     key = jax.random.PRNGKey(0)
-    mods, params = init_vgg16(key, (IMAGE, IMAGE, 3), width_mult=0.25,
+    mods, params = init_vgg16(key, SHAPE, width_mult=0.25,
                               n_classes=10, n_stages=3)
 
-    # --- the planner picks N for a memory budget (Eqs. 9/10/12/16) -------
+    # --- budget-driven planning (Eqs. 9/10/12/16) ------------------------
+    # hand the planner a byte budget; it auto-selects the cheapest engine
+    # that fits (Table I order) and the minimal granularity N
     budget = 10 * 2**20  # pretend we only have 10 MiB for activations
-    plan = solve_n(mods, (IMAGE, IMAGE, 3), BATCH, budget, "twophase")
-    print(f"planner: budget=10MiB -> 2PS N={plan.n_rows} "
-          f"(est {plan.est_bytes/2**20:.1f} MiB, feasible={plan.feasible})")
+    plan = Planner.for_budget(mods, SHAPE, BATCH, budget)
+    print(f"planner: budget=10MiB -> {plan.describe()}")
+    print(f"         (JSON round-trip: {plan == ExecutionPlan.from_json(plan.to_json())})")
     for strat in ("base", "twophase", "overlap"):
         n = max(2, plan.n_rows) if strat != "base" else 1
-        est = estimate_bytes(mods, (IMAGE, IMAGE, 3), BATCH, strat, n)
+        est = estimate_bytes(mods, SHAPE, BATCH, strat, n)
         print(f"  analytic Ω_BP[{strat:9s} N={n}]: {est/2**20:6.1f} MiB")
 
-    # --- exactness -------------------------------------------------------
+    # --- exactness: every engine through the one registry ----------------
     x = jax.random.normal(key, (BATCH, IMAGE, IMAGE, 3))
-    base = make_strategy_apply(mods, IMAGE, "base")
-    ovl = make_strategy_apply(mods, IMAGE, "overlap", 4)
-    tps = make_strategy_apply(mods, IMAGE, "twophase", max(2, plan.n_rows))
+    base = build_apply(mods, ExecutionPlan.explicit("base", 1, SHAPE))
+    ovl = build_apply(mods, ExecutionPlan.explicit("overlap", 4, SHAPE))
+    tps_n = max(2, plan.n_rows)
+    tps = build_apply(mods, ExecutionPlan.explicit("twophase", tps_n, SHAPE))
     print("forward max|Δ| overlap:",
           float(jnp.abs(ovl(params["trunk"], x) - base(params["trunk"], x)).max()))
     print("forward max|Δ| 2PS:    ",

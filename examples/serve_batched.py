@@ -3,12 +3,9 @@ gemma3-family model (sliding-window local + global layers), then decode
 greedily with the mixed KV cache (ring buffers for local layers, full
 cache for global layers) — the decode_32k serve_step in miniature.
 
-  PYTHONPATH=src python examples/serve_batched.py
+  pip install -e . && python examples/serve_batched.py
+  (or without installing: PYTHONPATH=src python examples/serve_batched.py)
 """
-
-import sys
-
-sys.path.insert(0, "src")
 
 import time
 

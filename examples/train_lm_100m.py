@@ -5,18 +5,15 @@ CE head), on the synthetic pipeline.
 Default invocation trains a ~110M-param xLSTM-125M-family model (the
 smallest assigned arch) at seq 256 for 300 steps:
 
-  PYTHONPATH=src python examples/train_lm_100m.py            # full run
-  PYTHONPATH=src python examples/train_lm_100m.py --steps 20 # smoke
+  python examples/train_lm_100m.py            # full run
+  python examples/train_lm_100m.py --steps 20 # smoke
+  (pip install -e . first, or prefix with PYTHONPATH=src)
 
 Any assigned arch works via --arch (reduced variants with --preset
 reduced).
 """
 
 import argparse
-import sys
-
-sys.path.insert(0, "src")
-
 import dataclasses
 import time
 

@@ -1,10 +1,11 @@
 """ResNet-50 [He et al., CVPR'16] — the paper's own benchmark."""
 from repro.configs.vgg16 import CNNConfig
+from repro.exec.plan import PlanRequest
 
 CONFIG = CNNConfig(name="resnet50", arch="resnet50")
 
 
 def reduced():
     return CNNConfig(name="resnet50-reduced", arch="resnet50", image=64,
-                     width_mult=0.125, batch=2, n_rows=2,
-                     strategy="overlap")
+                     width_mult=0.125, batch=2,
+                     plan=PlanRequest(engine="overlap", n_rows=2))

@@ -1,10 +1,14 @@
 """VGG-16 [Simonyan & Zisserman, ICLR'15] — the paper's own benchmark.
 
-Row-centric CNN training config: strategy/granularity chosen by the
-rowplan solver against the memory budget (the paper's RTX3090 = 24 GB /
-RTX3080 = 10 GB scenarios are reproduced in benchmarks/).
+Row-centric CNN training config: the config carries a :class:`PlanRequest`
+(engine + granularity, or just a byte budget) which the launcher resolves
+to an :class:`~repro.exec.plan.ExecutionPlan` via ``Planner`` — the
+paper's RTX3090 = 24 GB / RTX3080 = 10 GB scenarios are reproduced in
+benchmarks/.
 """
 import dataclasses
+
+from repro.exec.plan import PlanRequest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -16,9 +20,10 @@ class CNNConfig:
     n_classes: int = 10
     batch: int = 32
     width_mult: float = 1.0
-    strategy: str = "twophase_h"   # base|ckp|overlap|twophase|overlap_h|twophase_h
-    n_rows: int = 8
-    budget_gb: float = 24.0
+    # plan request: pinned engine+N by default; set engine="" and a
+    # budget to let Planner.for_budget auto-select (Table I trade-offs)
+    plan: PlanRequest = PlanRequest(engine="twophase_h", n_rows=8,
+                                    budget_gb=24.0)
 
 
 CONFIG = CNNConfig(name="vgg16", arch="vgg16")
@@ -26,5 +31,5 @@ CONFIG = CNNConfig(name="vgg16", arch="vgg16")
 
 def reduced():
     return CNNConfig(name="vgg16-reduced", arch="vgg16", image=64,
-                     width_mult=0.125, batch=2, n_rows=2,
-                     strategy="twophase")
+                     width_mult=0.125, batch=2,
+                     plan=PlanRequest(engine="twophase", n_rows=2))

@@ -100,25 +100,22 @@ def make_hybrid_apply(modules: Sequence, h0: int,
 
 def make_strategy_apply(modules: Sequence, h0: int, strategy: str,
                         n_rows: int = 1, n_segments: int | None = None):
-    """One-stop factory for all the paper's solutions.
+    """Deprecated string-dispatch factory — use :mod:`repro.exec` instead::
 
-    strategy in {base, ckp, overlap, twophase, overlap_h, twophase_h}.
+        from repro.exec import ExecutionPlan, build_apply
+        apply = build_apply(modules, ExecutionPlan.explicit(strategy, n_rows,
+                                                            in_shape=(h0, w, c)))
+
+    Kept as a thin shim over the engine registry; output is identical to
+    the registry's (same builders, same plans).
     """
-    if strategy == "base":
-        return _ov.make_column_apply(modules)
-    if strategy == "ckp":
-        segs = [SegmentSpec(a, b, 1, "column")
-                for a, b in auto_segments(len(modules), n_segments)]
-        return make_hybrid_apply(modules, h0, segs)
-    if strategy == "overlap":
-        return _ov.make_overlap_apply(modules, h0, n_rows)
-    if strategy == "twophase":
-        return _tp.make_twophase_apply(modules, h0, n_rows)
-    if strategy in ("overlap_h", "twophase_h"):
-        inner = "overlap" if strategy == "overlap_h" else "twophase"
-        cuts = auto_segments(len(modules), n_segments)
-        caps = max_rows_per_segment(modules, h0, cuts, inner)
-        segs = [SegmentSpec(a, b, max(1, min(n_rows, cap)), inner)
-                for (a, b), cap in zip(cuts, caps)]
-        return make_hybrid_apply(modules, h0, segs)
-    raise ValueError(strategy)
+    import warnings
+
+    from repro.exec import ExecutionPlan, build_apply
+    warnings.warn(
+        "make_strategy_apply is deprecated; use repro.exec.Planner / "
+        "build_apply (the ExecutionPlan API)", DeprecationWarning,
+        stacklevel=2)
+    plan = ExecutionPlan.explicit(strategy, n_rows, in_shape=(h0, h0, 3),
+                                  n_segments=n_segments)
+    return build_apply(modules, plan)

@@ -1,0 +1,35 @@
+"""repro.exec — first-class row-centric execution plans and engines.
+
+The LR-CNN split, made structural:
+
+* policy  — :class:`ExecutionPlan` / :class:`PlanRequest` (what to run:
+  engine, granularity N, segmentation, budget, feasibility), solved by
+  :class:`Planner` (Eqs. 7-16);
+* mechanism — the engine registry (:func:`register_engine` /
+  :func:`build_apply`), under which the six CNN strategies and the three
+  sequence-axis transplants are uniform entries.
+
+Typical use::
+
+    from repro.exec import Planner, build_apply
+    plan = Planner.for_budget(modules, (H, W, C), batch, budget_bytes)
+    print(plan.describe())           # engine, N, est bytes, feasibility
+    apply_fn = build_apply(modules, plan)
+"""
+
+from repro.exec.plan import ExecutionPlan, PlanRequest
+from repro.exec.planner import (
+    BUDGET_PREFERENCE, CNN_ENGINES, Planner, segment_row_capacity,
+)
+from repro.exec.registry import (
+    EngineSpec, build_apply, get_engine, list_engines, register_engine,
+)
+
+# importing the module registers the built-in engines
+from repro.exec import engines as _builtin_engines  # noqa: E402,F401
+
+__all__ = [
+    "ExecutionPlan", "PlanRequest", "Planner", "EngineSpec",
+    "register_engine", "get_engine", "list_engines", "build_apply",
+    "CNN_ENGINES", "BUDGET_PREFERENCE", "segment_row_capacity",
+]

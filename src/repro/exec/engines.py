@@ -1,0 +1,131 @@
+"""Built-in engines: the paper's six CNN strategies plus the three
+sequence-axis transplants, all behind the registry's uniform
+``build(modules, plan) -> apply_fn`` signature.
+
+CNN engines (``kind="cnn"``): ``modules`` is the conv module list, the plan
+partitions the input height ``plan.h0``; the returned ``apply(params, x)``
+is a drop-in trunk forward with row-centric custom VJPs.
+
+Sequence engines (``kind="seq"``): ``modules`` is the chunk-body callable
+(the per-token fn / scan body / attend kernel) and ``plan.n_rows`` is the
+chunk count along ``plan.get("axis", 1)``; the returned apply mirrors the
+underlying :mod:`repro.core.seqrow` helper's call shape.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core import overlap as _ov
+from repro.core import seqrow as _sr
+from repro.core import twophase as _tp
+from repro.exec.plan import ExecutionPlan
+from repro.exec.registry import register_engine
+
+
+def _segment_specs(modules: Sequence, plan: ExecutionPlan,
+                   inner: str) -> List:
+    """SegmentSpec list for the checkpointed engines: honour a pinned
+    ``plan.segments`` verbatim; otherwise derive them through the same
+    rule the planner estimates with (``derive_segments``), so estimate
+    and execution can never desync."""
+    from repro.core.hybrid import SegmentSpec
+    from repro.exec.planner import derive_segments
+    segments = plan.segments or derive_segments(
+        modules, plan.h0, inner, plan.n_rows, plan.n_segments)
+    return [SegmentSpec(a, b, n, inner) for a, b, n in segments]
+
+
+# ---------------------------------------------------------------------------
+# CNN trunk engines
+# ---------------------------------------------------------------------------
+
+
+@register_engine("base", kind="cnn",
+                 doc="column-centric reference (the paper's Base)")
+def _build_base(modules, plan: ExecutionPlan):
+    return _ov.make_column_apply(modules)
+
+
+@register_engine("ckp", kind="cnn",
+                 doc="sqrt(L) checkpointing, Chen et al. (the paper's Ckp)")
+def _build_ckp(modules, plan: ExecutionPlan):
+    from repro.core.hybrid import make_hybrid_apply
+    segs = _segment_specs(modules, plan, "column")
+    return make_hybrid_apply(modules, plan.h0, segs)
+
+
+@register_engine("overlap", kind="cnn",
+                 doc="OverL: replicated-halo rows, independent (Sec. IV-B)")
+def _build_overlap(modules, plan: ExecutionPlan):
+    n_bp = plan.get("n_rows_bp")
+    return _ov.make_overlap_apply(modules, plan.h0, plan.n_rows,
+                                  n_rows_bp=n_bp)
+
+
+@register_engine("twophase", kind="cnn",
+                 doc="2PS: sequential rows with boundary cache (Sec. IV-A)")
+def _build_twophase(modules, plan: ExecutionPlan):
+    return _tp.make_twophase_apply(modules, plan.h0, plan.n_rows)
+
+
+@register_engine("overlap_h", kind="cnn",
+                 doc="OverL-H: OverL rows inside sqrt(L) checkpoint segments")
+def _build_overlap_h(modules, plan: ExecutionPlan):
+    from repro.core.hybrid import make_hybrid_apply
+    return make_hybrid_apply(modules, plan.h0,
+                             _segment_specs(modules, plan, "overlap"))
+
+
+@register_engine("twophase_h", kind="cnn",
+                 doc="2PS-H: 2PS rows inside sqrt(L) checkpoint segments")
+def _build_twophase_h(modules, plan: ExecutionPlan):
+    from repro.core.hybrid import make_hybrid_apply
+    return make_hybrid_apply(modules, plan.h0,
+                             _segment_specs(modules, plan, "twophase"))
+
+
+# ---------------------------------------------------------------------------
+# Sequence-axis engines (the LM transplant, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+@register_engine("seq_chunked", kind="seq",
+                 doc="halo-0 sequence chunks with per-chunk remat "
+                     "(per-token layers)")
+def _build_seq_chunked(modules, plan: ExecutionPlan):
+    fn = modules
+    axis = int(plan.get("axis", 1))
+
+    def apply(x):
+        return _sr.chunked_apply(fn, x, plan.n_rows, axis)
+
+    return apply
+
+
+@register_engine("seq_carry_scan", kind="seq",
+                 doc="2PS along the sequence: carried state as boundary "
+                     "cache (recurrent scans)")
+def _build_seq_carry_scan(modules, plan: ExecutionPlan):
+    body = modules
+    axis = int(plan.get("axis", 1))
+
+    def apply(carry_init, xs):
+        return _sr.carry_scan_remat(body, carry_init, xs, plan.n_rows, axis)
+
+    return apply
+
+
+@register_engine("seq_swa_overlap", kind="seq",
+                 doc="OverL along the sequence: replicated KV halo for "
+                     "sliding-window attention")
+def _build_seq_swa_overlap(modules, plan: ExecutionPlan):
+    attend = modules
+    window = int(plan.get("window", 0))
+    if window <= 0:
+        raise ValueError("seq_swa_overlap plan needs a 'window' extra")
+
+    def apply(q, k, v):
+        return _sr.swa_overlap_chunks(attend, q, k, v, window, plan.n_rows)
+
+    return apply

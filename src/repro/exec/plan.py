@@ -1,0 +1,134 @@
+"""First-class execution plans (LR-CNN Secs. III-C/IV as *policy objects*).
+
+LR-CNN's contribution is a planner (Eqs. 7-16 pick a granularity N and a
+strategy under a memory budget M) driving an executor (2PS / OverL / hybrid
+rows).  :class:`ExecutionPlan` is the serializable hand-off between the two:
+it records *what* to run (engine name, granularity, segmentation) together
+with *why* (estimated peak bytes, the budget it was solved against,
+feasibility), and nothing about *how* — mechanism lives in the engine
+registry (:mod:`repro.exec.registry`).
+
+Plans are plain data: JSON round-trippable, hashable, and diffable, so they
+can be logged next to training metrics, shipped to remote workers, or
+replayed for reproducibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """What a config *asks for* — resolved to an :class:`ExecutionPlan` by
+    the :class:`~repro.exec.planner.Planner` at launch time.
+
+    Either pin an engine/granularity explicitly, or leave ``n_rows`` at 0
+    and set ``budget_gb`` to let the solver pick both (Eqs. 9/10/12/16).
+    """
+
+    engine: str = ""                  # "" = auto-select under budget
+    n_rows: int = 0                   # 0 = solve min N under budget
+    budget_gb: float = 0.0            # activation budget M (0 = none)
+    n_segments: Optional[int] = None  # hybrid/ckp segment count (None = sqrt L)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A resolved, serializable execution policy.
+
+    ``segments`` (when non-empty) pins the hybrid segmentation as
+    ``(start, end, n_rows)`` triples over the module list; engines honour it
+    verbatim so a logged plan replays bit-for-bit.  ``extras`` carries
+    engine-specific knobs (sequence axis, SWA window, ...) as a flat tuple
+    of pairs to keep the plan hashable and JSON-clean.
+    """
+
+    engine: str
+    n_rows: int = 1
+    in_shape: Optional[Tuple[int, int, int]] = None  # (H, W, C); None for seq
+    batch: int = 1
+    dtype_bytes: int = 4
+    n_segments: Optional[int] = None
+    segments: Tuple[Tuple[int, int, int], ...] = ()
+    est_bytes: int = 0
+    budget: int = 0          # bytes; 0 = unconstrained
+    feasible: bool = True
+    extras: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        # normalize containers so equality survives a JSON round-trip
+        object.__setattr__(self, "extras", tuple(sorted(self.extras)))
+        object.__setattr__(self, "segments",
+                           tuple(tuple(s) for s in self.segments))
+        if self.in_shape is not None:
+            object.__setattr__(self, "in_shape", tuple(self.in_shape))
+
+    # ------------------------------------------------------------------
+    @property
+    def h0(self) -> int:
+        """Input height the CNN engines partition over."""
+        if self.in_shape is None:
+            raise ValueError(f"plan for engine {self.engine!r} has no in_shape")
+        return self.in_shape[0]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        for k, v in self.extras:
+            if k == key:
+                return v
+        return default
+
+    def with_extras(self, **kv) -> "ExecutionPlan":
+        extras = tuple((k, v) for k, v in self.extras if k not in kv) \
+            + tuple(kv.items())
+        return dataclasses.replace(self, extras=extras)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def explicit(cls, engine: str, n_rows: int = 1,
+                 in_shape: Optional[Tuple[int, int, int]] = None,
+                 n_segments: Optional[int] = None, **extras) -> "ExecutionPlan":
+        """An unestimated plan pinning (engine, N) — the escape hatch for
+        callers that already know what they want (benchmarks, tests, the
+        deprecated ``make_strategy_apply`` shim)."""
+        return cls(engine=engine, n_rows=n_rows, in_shape=in_shape,
+                   n_segments=n_segments, extras=tuple(extras.items()))
+
+    # ------------------------------------------------------------------
+    def describe(self) -> str:
+        bits = [f"engine={self.engine}", f"N={self.n_rows}"]
+        if self.segments:
+            bits.append(f"segments={len(self.segments)}")
+        if self.est_bytes:
+            bits.append(f"est={self.est_bytes / 2**20:.1f}MiB")
+        if self.budget:
+            bits.append(f"budget={self.budget / 2**20:.1f}MiB")
+            bits.append(f"feasible={self.feasible}")
+        for k, v in self.extras:
+            bits.append(f"{k}={v}")
+        return "ExecutionPlan(" + " ".join(bits) + ")"
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["in_shape"] = list(self.in_shape) if self.in_shape else None
+        d["segments"] = [list(s) for s in self.segments]
+        d["extras"] = {k: v for k, v in self.extras}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecutionPlan":
+        d = dict(d)
+        if d.get("in_shape") is not None:
+            d["in_shape"] = tuple(d["in_shape"])
+        d["segments"] = tuple(tuple(s) for s in d.get("segments", ()))
+        d["extras"] = tuple(sorted(d.get("extras", {}).items()))
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s))

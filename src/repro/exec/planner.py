@@ -1,0 +1,298 @@
+"""The Planner: Eqs. 7-16 as a policy solver producing ExecutionPlans.
+
+Wraps the analytic memory model and N-solvers in :mod:`repro.core.rowplan`
+and adds the two pieces the raw solvers don't have:
+
+* segment-aware estimates for the checkpointed engines (Ckp / 2PS-H /
+  OverL-H): live bytes = segment-input checkpoints + the worst segment's
+  inner-strategy peak;
+* strategy *selection* under a byte budget (``Planner.for_budget``),
+  ordered by the paper's Table I / Fig. 8 trade-offs — prefer the engine
+  with the least runtime overhead that fits:
+  Base (no overhead) -> 2PS (no redundant compute, sequential rows) ->
+  OverL (redundant halo compute, independent rows) -> 2PS-H / OverL-H
+  (checkpointing admits larger N at extra recompute) -> Ckp (fallback).
+
+Sequence-side planning (``Planner.for_model`` / ``for_budget_seq``) applies
+the same Eq. 7 logic along the token axis: the live set of a chunked block
+is the residual stream plus one chunk's widest sub-layer working set.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+from repro.core import rowplan as _rp
+from repro.exec.plan import ExecutionPlan, PlanRequest
+
+CNN_ENGINES = ("base", "ckp", "overlap", "twophase", "overlap_h",
+               "twophase_h")
+#: auto-selection order under a budget (least runtime overhead first)
+BUDGET_PREFERENCE = ("base", "twophase", "overlap", "twophase_h",
+                     "overlap_h", "ckp")
+#: per-segment strategy of each checkpointed engine
+INNER_STRATEGY = {"ckp": "column", "overlap_h": "overlap",
+                  "twophase_h": "twophase"}
+
+
+def derive_segments(modules: Sequence, h0: int, inner: str, n_rows: int,
+                    n_segments: Optional[int]
+                    ) -> Tuple[Tuple[int, int, int], ...]:
+    """The one segmentation rule shared by planner estimates and engine
+    builders: sqrt(L) even cuts with per-segment granularity caps
+    (Table I).  Returns (start, end, n_rows) triples."""
+    from repro.core.hybrid import auto_segments, max_rows_per_segment
+    cuts = auto_segments(len(modules), n_segments)
+    if inner == "column":
+        return tuple((a, b, 1) for a, b in cuts)
+    caps = max_rows_per_segment(modules, h0, cuts, inner)
+    return tuple((a, b, max(1, min(n_rows, cap)))
+                 for (a, b), cap in zip(cuts, caps))
+
+
+class Planner:
+    """Solves (engine, N, segments) for a CNN trunk under a byte budget."""
+
+    def __init__(self, modules: Sequence, in_shape: Tuple[int, int, int],
+                 batch: int, dtype_bytes: int = 4, xi: int = 0,
+                 n_max: int = 64):
+        self.modules = list(modules)
+        self.in_shape = tuple(in_shape)
+        self.batch = batch
+        self.dtype_bytes = dtype_bytes
+        self.xi = xi                      # params/grads/workspace constant
+        self.n_max = n_max
+
+    # ------------------------------------------------------------------
+    # estimates
+    # ------------------------------------------------------------------
+    def _shapes(self):
+        return _rp.shape_chain(self.modules, self.in_shape)
+
+    def _segments(self, n_rows: int, inner: str,
+                  n_segments: Optional[int]) -> Tuple[Tuple[int, int, int], ...]:
+        return derive_segments(self.modules, self.in_shape[0], inner,
+                               n_rows, n_segments)
+
+    def _estimate_segmented(self, segments, inner: str) -> int:
+        """Checkpoint bytes (segment-input maps stay live FP->BP) + worst
+        per-segment peak under the inner strategy."""
+        shapes = self._shapes()
+        db, B = self.dtype_bytes, self.batch
+        ckpt = sum(B * shapes[a][0] * shapes[a][1] * shapes[a][2] * db
+                   for a, _, _ in segments if a > 0)
+        worst = 0
+        for a, b, n in segments:
+            sub = self.modules[a:b]
+            sub_shape = shapes[a]
+            if inner == "column":
+                est = _rp.omega_column(sub, sub_shape, B, db)
+            else:
+                est = _rp.estimate_bytes(sub, sub_shape, B, inner, n, db)
+            worst = max(worst, est)
+        return ckpt + worst
+
+    def estimate(self, engine: str, n_rows: int,
+                 n_segments: Optional[int] = None,
+                 segments: Tuple[Tuple[int, int, int], ...] = ()) -> int:
+        if engine in ("base",):
+            return _rp.omega_column(self.modules, self.in_shape, self.batch,
+                                    self.dtype_bytes) + self.xi
+        if engine in ("overlap", "twophase"):
+            return _rp.estimate_bytes(self.modules, self.in_shape, self.batch,
+                                      engine, n_rows, self.dtype_bytes,
+                                      self.xi)
+        if engine in INNER_STRATEGY:
+            inner = INNER_STRATEGY[engine]
+            segs = segments or self._segments(n_rows, inner, n_segments)
+            return self._estimate_segmented(segs, inner) + self.xi
+        raise ValueError(f"unknown CNN engine {engine!r}; known: "
+                         f"{list(CNN_ENGINES)}")
+
+    # ------------------------------------------------------------------
+    # explicit plans
+    # ------------------------------------------------------------------
+    def plan(self, engine: str, n_rows: int = 1,
+             n_segments: Optional[int] = None, budget: int = 0,
+             **extras) -> ExecutionPlan:
+        """Resolve an explicit (engine, N) request into a full plan with
+        estimates and (for checkpointed engines) pinned segments."""
+        n_rows = max(1, n_rows)
+        segments: Tuple[Tuple[int, int, int], ...] = ()
+        if engine in INNER_STRATEGY:
+            segments = self._segments(n_rows, INNER_STRATEGY[engine],
+                                      n_segments)
+        est = self.estimate(engine, n_rows, n_segments, segments)
+        return ExecutionPlan(
+            engine=engine, n_rows=n_rows, in_shape=self.in_shape,
+            batch=self.batch, dtype_bytes=self.dtype_bytes,
+            n_segments=n_segments, segments=segments, est_bytes=est,
+            budget=budget, feasible=(budget == 0 or est < budget),
+            extras=tuple(extras.items()))
+
+    def resolve(self, request: PlanRequest) -> ExecutionPlan:
+        """Turn a config-level :class:`PlanRequest` into a plan."""
+        budget = int(request.budget_gb * 2**30)
+        if request.engine and request.n_rows:
+            return self.plan(request.engine, request.n_rows,
+                             request.n_segments, budget=budget)
+        if request.engine:
+            return self.solve(request.engine, budget,
+                              n_segments=request.n_segments)
+        if request.n_rows:
+            # engine auto, N pinned: first engine (Table I order) feasible
+            # at exactly this granularity
+            best: Optional[ExecutionPlan] = None
+            from repro.core import twophase as _tp
+            for engine in BUDGET_PREFERENCE:
+                if engine in ("base", "ckp") and request.n_rows > 1:
+                    continue  # granularity-free engines can't honour N
+                try:
+                    if engine == "twophase" and not _tp.validate_plan(
+                            _tp.module_boundaries(self.modules,
+                                                  self.in_shape[0],
+                                                  request.n_rows)):
+                        continue  # exceeds the 2PS granularity bound
+                    p = self.plan(engine, request.n_rows,
+                                  request.n_segments, budget=budget)
+                except ValueError:  # N invalid for this engine's bounds
+                    continue
+                if p.feasible:
+                    return p
+                if best is None or p.est_bytes < best.est_bytes:
+                    best = p
+            if best is not None:
+                return best
+        return self.for_budget(self.modules, self.in_shape, self.batch,
+                               budget, dtype_bytes=self.dtype_bytes,
+                               xi=self.xi, n_max=self.n_max)
+
+    # ------------------------------------------------------------------
+    # budget-driven solving
+    # ------------------------------------------------------------------
+    def solve(self, engine: str, budget: int,
+              n_segments: Optional[int] = None) -> ExecutionPlan:
+        """min N s.t. estimate(engine, N) < budget (Eqs. 9/10/12/16 plus
+        the Sec. IV validity bounds), as a plan."""
+        if engine in ("base", "overlap", "twophase"):
+            r = _rp.solve_n(self.modules, self.in_shape, self.batch, budget,
+                            engine, self.dtype_bytes, self.xi, self.n_max)
+            return self.plan(engine, max(1, r.n_rows), budget=budget)
+        if engine == "ckp":  # granularity-free: one estimate
+            return self.plan(engine, 1, n_segments, budget=budget)
+        # hybrid engines: per-segment granularity caps bound the search
+        inner = INNER_STRATEGY[engine]
+        caps = [cap for _, _, cap in segment_row_capacity(
+            self.modules, self.in_shape[0], inner, n_segments)]
+        best: Optional[ExecutionPlan] = None
+        for n in range(1, min(self.n_max, max(caps)) + 1):
+            p = self.plan(engine, n, n_segments, budget=budget)
+            if p.feasible:
+                return p
+            if best is None or p.est_bytes < best.est_bytes:
+                best = p
+        return best
+
+    @classmethod
+    def for_budget(cls, modules: Sequence, in_shape: Tuple[int, int, int],
+                   batch: int, budget: int, dtype_bytes: int = 4,
+                   xi: int = 0, n_max: int = 64,
+                   candidates: Sequence[str] = BUDGET_PREFERENCE
+                   ) -> ExecutionPlan:
+        """Auto-select strategy *and* granularity under a byte budget.
+
+        Tries ``candidates`` in order of increasing runtime overhead
+        (Table I / Fig. 8) and returns the first feasible plan; if nothing
+        fits, returns the infeasible plan with the smallest estimate so the
+        caller can see how far over budget it is.
+        """
+        planner = cls(modules, in_shape, batch, dtype_bytes, xi, n_max)
+        best: Optional[ExecutionPlan] = None
+        for engine in candidates:
+            p = planner.solve(engine, budget)
+            if p.feasible:
+                return p
+            if best is None or p.est_bytes < best.est_bytes:
+                best = p
+        return best
+
+    # ------------------------------------------------------------------
+    # sequence-side planning (the LM transplant)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def seq_estimate(seq_len: int, d_model: int, batch: int, n_chunks: int,
+                     d_ff: int = 0, window: int = 0,
+                     dtype_bytes: int = 4) -> int:
+        """Eq. 7 along the token axis: residual stream (always live) + one
+        chunk's widest sub-layer working set (+ the SWA halo)."""
+        width = max(3 * d_model, 2 * (d_ff or 4 * d_model))
+        chunk_tokens = -(-seq_len // n_chunks) + window
+        stream = batch * seq_len * d_model * dtype_bytes
+        return stream + batch * chunk_tokens * width * dtype_bytes
+
+    @classmethod
+    def for_budget_seq(cls, seq_len: int, d_model: int, batch: int,
+                       budget: int, d_ff: int = 0,
+                       engine: str = "seq_chunked", window: int = 0,
+                       axis: int = 1, dtype_bytes: int = 4,
+                       n_max: int = 64) -> ExecutionPlan:
+        """Smallest chunk count (dividing ``seq_len``) that fits ``budget``;
+        infeasible plan at the largest divisor otherwise."""
+        divisors = [n for n in range(1, min(n_max, seq_len) + 1)
+                    if seq_len % n == 0]
+        extras = {"axis": axis, "seq": seq_len, "d_model": d_model}
+        if window:
+            extras["window"] = window
+        best = None
+        for n in divisors:
+            est = cls.seq_estimate(seq_len, d_model, batch, n, d_ff, window,
+                                   dtype_bytes)
+            plan = ExecutionPlan(
+                engine=engine, n_rows=n, in_shape=None, batch=batch,
+                dtype_bytes=dtype_bytes, est_bytes=est, budget=budget,
+                feasible=(budget == 0 or est < budget),
+                extras=tuple(extras.items()))
+            if plan.feasible:
+                return plan
+            best = plan
+        return best
+
+    @classmethod
+    def for_model(cls, cfg, batch: int, seq_len: int,
+                  budget: int = 0) -> ExecutionPlan:
+        """Sequence plan for a :class:`~repro.models.lm.config.ModelConfig`:
+        engine from the layer pattern, N from the budget (or the config's
+        ``row_chunks`` when unconstrained)."""
+        kinds = set(cfg.layer_kinds())
+        if kinds & {"mamba", "mlstm", "slstm"}:
+            engine, window = "seq_carry_scan", 0
+        elif "local" in kinds and cfg.sliding_window:
+            engine, window = "seq_swa_overlap", cfg.sliding_window
+        else:
+            engine, window = "seq_chunked", 0
+        dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+        if budget:
+            return cls.for_budget_seq(seq_len, cfg.d_model, batch, budget,
+                                      d_ff=cfg.d_ff, engine=engine,
+                                      window=window, dtype_bytes=dtype_bytes)
+        n = max(1, cfg.row_chunks)
+        est = cls.seq_estimate(seq_len, cfg.d_model, batch, n, cfg.d_ff,
+                               window, dtype_bytes)
+        extras = {"axis": 1, "seq": seq_len, "d_model": cfg.d_model}
+        if window:
+            extras["window"] = window
+        return ExecutionPlan(engine=engine, n_rows=n, in_shape=None,
+                             batch=batch, dtype_bytes=dtype_bytes,
+                             est_bytes=est, extras=tuple(extras.items()))
+
+
+def segment_row_capacity(modules: Sequence, h0: int, inner: str,
+                         n_segments: Optional[int] = None
+                         ) -> Tuple[Tuple[int, int, int], ...]:
+    """Per-segment granularity caps under sqrt(L) segmentation — the
+    Table I counters, exposed as plan-shaped (start, end, cap) triples."""
+    from repro.core.hybrid import auto_segments, max_rows_per_segment
+    cuts = auto_segments(len(modules), n_segments)
+    caps = max_rows_per_segment(modules, h0, cuts, inner)
+    return tuple((a, b, cap) for (a, b), cap in zip(cuts, caps))

@@ -1,0 +1,71 @@
+"""Engine registry: one uniform ``build_apply(modules, plan) -> apply_fn``
+seam between execution plans (policy) and row-centric mechanisms.
+
+Every engine — the six CNN trunk strategies *and* the three sequence-axis
+transplants — registers here under a string key, so CNN trunks and LM
+sequence chunking are two instances of one abstraction.  Future backends
+(sharded plans, async boundary-cache prefetch, multi-backend kernels) plug
+in with ``register_engine`` without touching any call site.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.exec.plan import ExecutionPlan
+
+Builder = Callable[[Any, ExecutionPlan], Callable]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    kind: str           # "cnn" (modules = conv module list) | "seq" (callable)
+    build: Builder
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, EngineSpec] = {}
+
+
+def register_engine(name: str, build: Optional[Builder] = None, *,
+                    kind: str = "cnn", doc: str = ""):
+    """Register ``build(modules, plan) -> apply_fn`` under ``name``.
+
+    Usable directly or as a decorator::
+
+        @register_engine("twophase", doc="2PS rows")
+        def _build(modules, plan): ...
+    """
+    def _do(fn: Builder) -> Builder:
+        if name in _REGISTRY:
+            raise ValueError(f"engine {name!r} already registered")
+        _REGISTRY[name] = EngineSpec(name, kind, fn, doc or (fn.__doc__ or ""))
+        return fn
+
+    if build is not None:
+        return _do(build)
+    return _do
+
+
+def get_engine(name: str) -> EngineSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_engines(kind: Optional[str] = None) -> List[str]:
+    return sorted(n for n, s in _REGISTRY.items()
+                  if kind is None or s.kind == kind)
+
+
+def build_apply(modules, plan: ExecutionPlan) -> Callable:
+    """Resolve ``plan.engine`` in the registry and build its apply fn.
+
+    CNN engines return ``apply(params, x)``; sequence engines return the
+    call shape of their underlying helper (see :mod:`repro.exec.engines`).
+    """
+    return get_engine(plan.engine).build(modules, plan)

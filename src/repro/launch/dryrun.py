@@ -21,6 +21,7 @@ import jax
 from repro.analysis.costmodel import analyze as cost_analyze
 from repro.analysis.roofline import analyze
 from repro.configs import get_config, list_configs
+from repro.exec import Planner
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import SHAPES, build_jitted, shape_applicable
 
@@ -36,6 +37,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "fsdp": fsdp, "overrides": overrides or {},
            "status": "skipped"}
+    # the resolved row-centric execution plan is part of the record so a
+    # dry-run artefact fully determines how the step would execute
+    rec["exec_plan"] = Planner.for_model(cfg, shape.batch,
+                                         shape.seq).to_dict()
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         rec["reason"] = why
@@ -57,13 +62,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             if verbose:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, list):  # newer jaxlib: one dict per device
+                    cost = cost[0] if cost else {}
                 print(f"[{arch} x {shape_name} x {mesh_name}] "
                       f"memory_analysis: {mem}")
                 print(f"[{arch} x {shape_name} x {mesh_name}] "
-                      f"cost_analysis: flops="
-                      f"{compiled.cost_analysis().get('flops', 0):.3e} "
-                      f"bytes="
-                      f"{compiled.cost_analysis().get('bytes accessed', 0):.3e}")
+                      f"cost_analysis: flops={cost.get('flops', 0):.3e} "
+                      f"bytes={cost.get('bytes accessed', 0):.3e}")
             hlo = compiled.as_text()
             roof = analyze(compiled, hlo, cfg, shape, mesh_name, n_chips)
             rec.update({f"hlo_{k}" if not k.startswith(("arch", "shape",

@@ -23,14 +23,28 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-gb", type=float, default=0.0,
+                    help="prefill activation budget; the Planner picks the "
+                         "sequence-chunk count for chunked prefill under it")
     args = ap.parse_args()
 
+    import dataclasses
+
     from repro.configs import get_config, get_reduced
+    from repro.exec import Planner
     from repro.models.lm import encdec as ED
     from repro.models.lm import model as LM
 
     cfg = get_reduced(args.arch) if args.preset == "reduced" \
         else get_config(args.arch)
+    if args.budget_gb:
+        plan = Planner.for_model(cfg, args.batch, args.prompt_len,
+                                 budget=int(args.budget_gb * 2**30))
+        print("prefill plan:", plan.describe())
+        # row_chunks only takes effect under a rows-remat policy
+        remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat,
+                                                            cfg.remat)
+        cfg = dataclasses.replace(cfg, row_chunks=plan.n_rows, remat=remat)
     key = jax.random.PRNGKey(args.seed)
     B, P, G = args.batch, args.prompt_len, args.gen
     max_len = P + G

@@ -5,6 +5,11 @@ Two modes:
             --preset reduced --steps 50 --batch 8 --seq 128
 * CNN:  PYTHONPATH=src python -m repro.launch.train --arch vgg16 \
             --preset reduced --steps 100 --strategy twophase --rows 4
+* auto: PYTHONPATH=src python -m repro.launch.train --arch vgg16 \
+            --preset reduced --steps 2 --budget-gb 0.01
+        (Planner.for_budget picks engine + N under the byte budget and
+        prints the resolved ExecutionPlan; works for LM archs too, where
+        the budget drives the sequence-chunk count)
 
 On this container the mesh is the local CPU host mesh; on a real pod the
 same code runs under make_production_mesh() (the dry-run proves lowering).
@@ -33,7 +38,10 @@ from repro.optim.adamw import (
 
 
 def train_lm(args):
+    import dataclasses
+
     from repro.configs import get_config, get_reduced
+    from repro.exec import Planner
     from repro.models.lm import model as LM
     from repro.models.lm import encdec as ED
     from repro.launch.steps import make_train_step
@@ -41,7 +49,17 @@ def train_lm(args):
     cfg = get_reduced(args.arch) if args.preset == "reduced" \
         else get_config(args.arch)
     if args.row_chunks:
-        cfg = type(cfg)(**{**cfg.__dict__, "row_chunks": args.row_chunks})
+        cfg = dataclasses.replace(cfg, row_chunks=args.row_chunks)
+    if args.budget_gb and not args.row_chunks:  # explicit --row-chunks wins
+        # budget-driven sequence-axis plan: pick the chunk count (Eq. 7
+        # along the token axis) and engine from the layer pattern
+        plan = Planner.for_model(cfg, args.batch, args.seq,
+                                 budget=int(args.budget_gb * 2**30))
+        print("plan:", plan.describe())
+        # row_chunks only takes effect under a rows-remat policy
+        remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat,
+                                                            cfg.remat)
+        cfg = dataclasses.replace(cfg, row_chunks=plan.n_rows, remat=remat)
     key = jax.random.PRNGKey(args.seed)
     init = ED.init_encdec if cfg.family == "encdec" else LM.init_lm
     params = init(key, cfg)
@@ -89,14 +107,12 @@ def train_lm(args):
 
 
 def train_cnn(args):
-    from repro.configs import get_config as _  # noqa
+    import dataclasses
     import importlib
     mod = importlib.import_module(f"repro.configs.{args.arch}")
     ccfg = mod.reduced() if args.preset == "reduced" else mod.CONFIG
-    strategy = args.strategy or ccfg.strategy
-    n_rows = args.rows or ccfg.n_rows
 
-    from repro.core.hybrid import make_strategy_apply
+    from repro.exec import Planner, build_apply
     from repro.models.cnn import resnet, vgg
     key = jax.random.PRNGKey(args.seed)
     shape = (ccfg.image, ccfg.image, ccfg.channels)
@@ -108,9 +124,26 @@ def train_cnn(args):
         mods, params = resnet.init_resnet50(key, shape, ccfg.width_mult,
                                             n_classes=ccfg.n_classes)
         head_apply = resnet.head_apply
-    trunk_apply = make_strategy_apply(mods, ccfg.image, strategy, n_rows)
+
+    # resolve the plan request: --budget-gb auto-selects engine+N via
+    # Planner.for_budget; --strategy/--rows pin them; else the config's
+    # PlanRequest decides
+    batch = args.batch or ccfg.batch
+    req = ccfg.plan
+    if args.budget_gb:
+        req = dataclasses.replace(req, engine="", n_rows=0,
+                                  budget_gb=args.budget_gb)
+    if args.strategy:
+        req = dataclasses.replace(req, engine=args.strategy)
+    if args.rows:
+        req = dataclasses.replace(req, n_rows=args.rows)
+    # the paper's ξ: params + grads + optimizer state live beside activations
+    xi = 3 * sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params))
+    plan = Planner(mods, shape, batch, xi=xi).resolve(req)
+    print("plan:", plan.describe())
+    trunk_apply = build_apply(mods, plan)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
-    print(f"arch={ccfg.arch} strategy={strategy} N={n_rows} "
+    print(f"arch={ccfg.arch} engine={plan.engine} N={plan.n_rows} "
           f"params={n_params/1e6:.1f}M image={ccfg.image}")
 
     def loss_fn(p, images, labels):
@@ -130,7 +163,7 @@ def train_cnn(args):
 
     ds = ImageDataset(ImageDatasetConfig(
         h=ccfg.image, w=ccfg.image, c=ccfg.channels,
-        n_classes=ccfg.n_classes, batch=args.batch or ccfg.batch,
+        n_classes=ccfg.n_classes, batch=batch,
         seed=args.seed))
     os.makedirs(args.out, exist_ok=True)
     log = []
@@ -163,6 +196,9 @@ def main():
     ap.add_argument("--row-chunks", type=int, default=0)
     ap.add_argument("--strategy", default=None)
     ap.add_argument("--rows", type=int, default=0)
+    ap.add_argument("--budget-gb", type=float, default=0.0,
+                    help="activation byte budget; Planner.for_budget "
+                         "auto-selects engine and granularity under it")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")

@@ -1,6 +1,8 @@
 """Unit + property tests for the interval algebra (paper Eqs. 11-15)."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.convmath import (

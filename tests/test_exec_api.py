@@ -1,0 +1,249 @@
+"""The repro.exec Plan/Engine API: registry completeness, budget round-trip
+(Planner -> ExecutionPlan -> build_apply) exactness vs the column baseline
+for every registered engine, shim deprecation + bit-for-bit parity, and
+plan serialization."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.overlap import make_column_apply
+from repro.exec import (
+    CNN_ENGINES, ExecutionPlan, PlanRequest, Planner, build_apply,
+    get_engine, list_engines,
+)
+from repro.models.cnn.vgg import init_vgg16
+
+H, BATCH = 64, 2
+SHAPE = (H, H, 3)
+KEY = jax.random.PRNGKey(0)
+MODS, PARAMS = init_vgg16(KEY, SHAPE, width_mult=0.125, n_classes=4,
+                          n_stages=3)
+X = jax.random.normal(jax.random.PRNGKey(1), (BATCH, H, H, 3))
+
+SEQ_ENGINES = ("seq_chunked", "seq_carry_scan", "seq_swa_overlap")
+
+
+def _grads(apply_fn, params, x):
+    def loss(p, x):
+        return jnp.sum(apply_fn(p, x) ** 2)
+    return jax.grad(loss, argnums=(0, 1))(params, x)
+
+
+def _max_rel(a, b):
+    out = 0.0
+    for l1, l2 in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        denom = float(jnp.abs(l1).max())
+        if denom > 0:
+            out = max(out, float(jnp.abs(l1 - l2).max()) / denom)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_engines():
+    cnn = list_engines("cnn")
+    for e in CNN_ENGINES:
+        assert e in cnn, e
+    seq = list_engines("seq")
+    for e in SEQ_ENGINES:
+        assert e in seq, e
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(KeyError, match="unknown engine"):
+        get_engine("no_such_engine")
+    with pytest.raises(ValueError, match="already registered"):
+        from repro.exec import register_engine
+        register_engine("base", lambda m, p: None)
+
+
+# ---------------------------------------------------------------------------
+# budget round-trip: Planner -> ExecutionPlan -> build_apply, exact for
+# every CNN engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", CNN_ENGINES)
+def test_budget_roundtrip_exact(engine):
+    planner = Planner(MODS, SHAPE, BATCH)
+    plan = planner.solve(engine, budget=2 * 2**20)
+    assert plan.engine == engine and plan.n_rows >= 1
+    assert plan.est_bytes > 0 and plan.budget == 2 * 2**20
+    fn = build_apply(MODS, plan)
+    ref = make_column_apply(MODS)(PARAMS["trunk"], X)
+    got = fn(PARAMS["trunk"], X)
+    assert float(jnp.abs(got - ref).max()) == 0.0  # bit-exact forward
+    gref = _grads(make_column_apply(MODS), PARAMS["trunk"], X)
+    ggot = _grads(fn, PARAMS["trunk"], X)
+    assert _max_rel(gref, ggot) < 1e-5
+
+
+def test_for_budget_auto_selects_feasible():
+    budget = 6 * 2**20
+    plan = Planner.for_budget(MODS, SHAPE, BATCH, budget)
+    assert plan.feasible and plan.est_bytes < budget
+    assert plan.engine in CNN_ENGINES
+    fn = build_apply(MODS, plan)
+    ref = make_column_apply(MODS)(PARAMS["trunk"], X)
+    assert float(jnp.abs(fn(PARAMS["trunk"], X) - ref).max()) == 0.0
+
+
+def test_for_budget_infeasible_reports_best_effort():
+    plan = Planner.for_budget(MODS, SHAPE, BATCH, budget=1)  # 1 byte
+    assert not plan.feasible
+    assert plan.est_bytes > 1
+
+
+def test_resolve_plan_request():
+    planner = Planner(MODS, SHAPE, BATCH)
+    pinned = planner.resolve(PlanRequest(engine="overlap", n_rows=3))
+    assert pinned.engine == "overlap" and pinned.n_rows == 3
+    auto = planner.resolve(PlanRequest(budget_gb=6 / 1024))
+    assert auto.feasible
+
+
+def test_resolve_honours_pinned_rows_under_budget():
+    """engine auto + N pinned + budget: the chosen engine must execute at
+    exactly the requested granularity, not whatever for_budget solves."""
+    planner = Planner(MODS, SHAPE, BATCH)
+    plan = planner.resolve(PlanRequest(n_rows=2, budget_gb=1.0))
+    assert plan.n_rows == 2 and plan.feasible
+    fn = build_apply(MODS, plan)
+    ref = make_column_apply(MODS)(PARAMS["trunk"], X)
+    assert float(jnp.abs(fn(PARAMS["trunk"], X) - ref).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sequence engines through the same registry
+# ---------------------------------------------------------------------------
+
+
+def test_seq_chunked_engine_exact():
+    x = jax.random.normal(KEY, (2, 32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    fn = lambda u: jnp.tanh(u @ w)  # noqa: E731
+    plan = ExecutionPlan.explicit("seq_chunked", 4, axis=1)
+    apply = build_apply(fn, plan)
+    assert jnp.allclose(apply(x), fn(x), atol=1e-6)
+    g1 = jax.grad(lambda xx: jnp.sum(fn(xx) ** 2))(x)
+    g2 = jax.grad(lambda xx: jnp.sum(apply(xx) ** 2))(x)
+    assert jnp.allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_seq_carry_scan_engine_exact():
+    x = jax.random.normal(KEY, (2, 32, 8))
+
+    def body(carry, chunk):  # EMA recurrence: the 2PS boundary carry
+        def step(c, xt):
+            c = 0.9 * c + 0.1 * xt
+            return c, c
+        carry, ys = jax.lax.scan(step, carry, jnp.moveaxis(chunk, 1, 0))
+        return carry, jnp.moveaxis(ys, 0, 1)
+
+    c0 = jnp.zeros((2, 8))
+    ref_c, ref = body(c0, x)
+    apply = build_apply(body, ExecutionPlan.explicit("seq_carry_scan", 4,
+                                                     axis=1))
+    got_c, got = apply(c0, x)
+    assert jnp.allclose(got, ref, atol=1e-6)
+    assert jnp.allclose(got_c, ref_c, atol=1e-6)
+
+
+def test_seq_swa_overlap_engine_exact():
+    B, S, HH, D = 2, 64, 2, 16
+    window = 16
+    q = jax.random.normal(KEY, (B, S, HH, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, HH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, HH, D))
+
+    def attend(qc, kc, vc, q_offset, k_offset):
+        d = qc.shape[-1]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) / jnp.sqrt(d)
+        qp = q_offset + jnp.arange(qc.shape[1])
+        kp = k_offset + jnp.arange(kc.shape[1])
+        ok = (kp[None, :] <= qp[:, None]) \
+            & (kp[None, :] > qp[:, None] - window) & (kp[None, :] >= 0)
+        s = jnp.where(ok[None, None], s, -1e30)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vc)
+
+    def ref_swa(q, k, v):
+        d = q.shape[-1]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(d)
+        qp = jnp.arange(S)
+        ok = (qp[None, :] <= qp[:, None]) & (qp[None, :] > qp[:, None] - window)
+        s = jnp.where(ok[None, None], s, -1e30)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+
+    plan = ExecutionPlan.explicit("seq_swa_overlap", 4, window=window)
+    apply = build_apply(attend, plan)
+    assert jnp.allclose(apply(q, k, v), ref_swa(q, k, v), atol=1e-5)
+
+
+def test_seq_swa_requires_window():
+    with pytest.raises(ValueError, match="window"):
+        build_apply(lambda *a: None,
+                    ExecutionPlan.explicit("seq_swa_overlap", 4))
+
+
+def test_for_model_picks_engine_by_family():
+    from repro.configs import get_reduced
+    ssm = Planner.for_model(get_reduced("xlstm_125m"), 2, 128)
+    assert ssm.engine == "seq_carry_scan"
+    swa = Planner.for_model(get_reduced("gemma3_4b"), 2, 128)
+    assert swa.engine == "seq_swa_overlap"
+    assert swa.get("window") == get_reduced("gemma3_4b").sliding_window
+    dense = Planner.for_model(get_reduced("llama3_2_3b"), 2, 128)
+    assert dense.engine == "seq_chunked"
+    budgeted = Planner.for_model(get_reduced("llama3_2_3b"), 2, 128,
+                                 budget=2**20)
+    assert budgeted.engine == "seq_chunked" and budgeted.budget == 2**20
+    assert 128 % budgeted.n_rows == 0  # chunk count divides the sequence
+
+
+# ---------------------------------------------------------------------------
+# deprecated shim
+# ---------------------------------------------------------------------------
+
+
+def test_make_strategy_apply_deprecated_and_bit_exact():
+    from repro.core.hybrid import make_strategy_apply
+    for engine, n in (("base", 1), ("twophase", 2), ("overlap", 3),
+                      ("ckp", 1), ("twophase_h", 3), ("overlap_h", 3)):
+        with pytest.warns(DeprecationWarning, match="repro.exec"):
+            shim = make_strategy_apply(MODS, H, engine, n)
+        reg = build_apply(MODS, ExecutionPlan.explicit(engine, n, SHAPE))
+        assert bool(jnp.array_equal(shim(PARAMS["trunk"], X),
+                                    reg(PARAMS["trunk"], X)))
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_roundtrip():
+    planner = Planner(MODS, SHAPE, BATCH)
+    for engine in CNN_ENGINES:
+        plan = planner.plan(engine, n_rows=3)
+        assert ExecutionPlan.from_json(plan.to_json()) == plan
+    seq = Planner.for_budget_seq(128, 64, 2, budget=2**30, window=8,
+                                 engine="seq_swa_overlap")
+    rt = ExecutionPlan.from_json(seq.to_json())
+    assert rt.engine == seq.engine and rt.n_rows == seq.n_rows
+    assert rt.get("window") == 8
+
+
+def test_plan_segments_replay_bit_exact():
+    """A plan's pinned segmentation must replay identically after a JSON
+    round-trip (log -> replay reproducibility)."""
+    planner = Planner(MODS, SHAPE, BATCH)
+    plan = planner.plan("twophase_h", n_rows=3)
+    assert plan.segments  # planner pins the segmentation
+    replayed = ExecutionPlan.from_json(plan.to_json())
+    a = build_apply(MODS, plan)(PARAMS["trunk"], X)
+    b = build_apply(MODS, replayed)(PARAMS["trunk"], X)
+    assert bool(jnp.array_equal(a, b))

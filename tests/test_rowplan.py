@@ -1,6 +1,8 @@
 """Memory model (Eqs. 3, 6-10, 12, 16) and N solvers."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.rowplan import (
