@@ -1,0 +1,96 @@
+"""Beyond-paper: continuous batching vs the old static-batch serving path
+at mixed prompt lengths, same byte budget — throughput (tok/s) and p50/p95
+per-request latency.
+
+The LR-CNN angle: both paths run the identical kernels and the identical
+decode-slot pool (the budget); the only difference is the scheduler
+refilling freed rows (continuous) vs draining the whole batch (static) —
+so any win is pure budget-utilisation, the Fig. 9/10 shape transplanted to
+serving.
+
+Standalone run prints the repo's BENCH JSON lines:
+  PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List
+
+import jax
+
+from repro.configs import get_reduced
+from repro.exec import Planner
+from repro.models.lm import model as LM
+from repro.serve import CachePool, Scheduler, ServeEngine, make_requests
+from repro.serve.scheduler import percentile
+
+N_REQUESTS = 16
+PROMPT_LENS = (16, 32, 64)   # mixed lengths -> mixed prefill + gen costs
+GEN = (4, 48)                # wide spread -> static batches idle longest
+N_SLOTS = 4                  # budget expressed in slots of the pool plan
+REPS = 3                     # median-of-3 per mode (common.time_fn idiom)
+
+
+def _run_mode(engine, cfg, plan, reqs, mode: str) -> dict:
+    # fresh pool bookkeeping per run; the engine (and with it every
+    # compiled prefill/decode function) is shared across modes
+    pool = CachePool(cfg, plan)
+    t0 = time.perf_counter()
+    report = Scheduler(engine, pool, reqs, mode=mode,
+                       walltime_fn=time.perf_counter).run()
+    wall = time.perf_counter() - t0
+    lat = [(st.finish_wall - t0) * 1e3 for st in report.states]
+    return {
+        "mode": mode,
+        "budget_bytes": plan.est_bytes,
+        "slots": plan.n_rows,
+        "generated": report.total_generated,
+        "wall_s": round(wall, 3),
+        "tok_s": round(report.total_generated / max(wall, 1e-9), 1),
+        "decode_steps": report.n_decode_steps,
+        "p50_ms": round(percentile(lat, 0.50), 1),
+        "p95_ms": round(percentile(lat, 0.95), 1),
+    }
+
+
+def run() -> List[dict]:
+    cfg = get_reduced("qwen1_5_4b")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = make_requests(N_REQUESTS, cfg.vocab, seed=0,
+                         prompt_len=PROMPT_LENS, max_new_tokens=GEN)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in reqs)
+    plan = Planner.for_serve(cfg, max_len, n_slots=N_SLOTS)
+    engine = ServeEngine(params, cfg, plan)
+    # warm every (prompt_len, chunks) prefill and the pooled decode so the
+    # measured runs compare steady-state scheduling, not compilation
+    _run_mode(engine, cfg, plan, reqs, "continuous")
+
+    def median_run(mode):
+        runs = sorted((_run_mode(engine, cfg, plan, reqs, mode)
+                       for _ in range(REPS)), key=lambda r: r["wall_s"])
+        return runs[REPS // 2]
+
+    static = median_run("static")
+    cont = median_run("continuous")
+    rows = []
+    for r in (cont, static):
+        rows.append({"name": f"serving/qwen4b_mixed/{r['mode']}",
+                     **{k: v for k, v in r.items() if k != "mode"}})
+    rows.append({"name": "serving/qwen4b_mixed/speedup",
+                 "tok_s_ratio": round(cont["tok_s"]
+                                      / max(static["tok_s"], 1e-9), 3),
+                 "decode_step_ratio": round(static["decode_steps"]
+                                            / max(cont["decode_steps"], 1),
+                                            3)})
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ MODULES = [
     ("fig11_convergence", "benchmarks.bench_convergence"),
     ("kernels", "benchmarks.bench_kernels"),
     ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
+    ("serving_continuous_batching", "benchmarks.bench_serving"),
 ]
 
 

@@ -1,7 +1,9 @@
-"""Batched serving example: prefill a batch of prompts through a reduced
-gemma3-family model (sliding-window local + global layers), then decode
-greedily with the mixed KV cache (ring buffers for local layers, full
-cache for global layers) — the decode_32k serve_step in miniature.
+"""Continuous-batching serving example: Poisson traffic with mixed prompt
+lengths through a reduced gemma3-family model (sliding-window local +
+global layers), scheduled by the `repro.serve` subsystem — requests borrow
+decode slots from a budget-sized cache pool (ring buffers for local
+layers, full KV for global layers) and freed slots are refilled on the
+fly.
 
   pip install -e . && python examples/serve_batched.py
   (or without installing: PYTHONPATH=src python examples/serve_batched.py)
@@ -10,13 +12,13 @@ cache for global layers) — the decode_32k serve_step in miniature.
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_reduced
+from repro.exec import Planner
 from repro.models.lm import model as LM
+from repro.serve import make_requests, serve
 
-BATCH, PROMPT, GEN = 4, 48, 24
+N_REQUESTS, GEN = 8, (8, 24)
 
 
 def main():
@@ -24,38 +26,32 @@ def main():
     print(f"arch={cfg.name} layers={cfg.layer_kinds()} "
           f"window={cfg.sliding_window}")
     params = LM.init_lm(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, PROMPT)),
-                         jnp.int32)
 
-    prefill = jax.jit(lambda p, b: LM.lm_prefill(p, b, cfg, PROMPT + GEN))
-    decode = jax.jit(lambda p, t, c: LM.lm_decode(p, t, c, cfg))
+    requests = make_requests(N_REQUESTS, cfg.vocab, seed=0,
+                             traffic="poisson", prompt_len=(16, 32, 48),
+                             max_new_tokens=GEN, mean_interarrival=2.0)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in requests)
+    # a budget worth ~3 slots: later arrivals queue until a slot frees up
+    budget = int(3.5 * Planner.decode_slot_bytes(cfg, max_len))
 
-    t0 = time.time()
-    logits, caches = prefill(params, {"tokens": tokens})
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(tok)
-    print(f"prefill({BATCH}x{PROMPT}): {(time.time()-t0)*1e3:.1f} ms")
+    t0 = time.perf_counter()
+    report, plan = serve(params, cfg, requests, budget=budget,
+                         walltime_fn=time.perf_counter)
+    wall = time.perf_counter() - t0
 
-    # verify the ring-buffer local cache really is window-bounded
-    local_lens = [c["k"].shape[2] for seg in caches for c in seg
-                  if "ring" in c]
-    print("per-layer cache lengths:", local_lens,
-          f"(local layers capped at window={cfg.sliding_window})")
-
-    out = [tok]
-    t0 = time.time()
-    for _ in range(GEN - 1):
-        logits, caches = decode(params, tok, caches)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    ms = (time.time() - t0) / (GEN - 1) * 1e3
-    gen = np.asarray(jnp.concatenate(out, axis=1))
-    print(f"decode: {ms:.2f} ms/token (batch {BATCH})")
-    for b in range(BATCH):
-        print(f"  request {b}: {gen[b][:12].tolist()} ...")
-    assert gen.shape == (BATCH, GEN)
+    print("pool plan:", plan.describe())
+    s = report.summary()
+    print(f"served {s['requests']} requests / {s['generated_tokens']} "
+          f"tokens in {wall:.2f}s ({s['generated_tokens'] / wall:.1f} "
+          f"tok/s); max {s['max_active']} concurrent, "
+          f"{s['decode_steps']} decode steps")
+    for st in report.states:
+        print(f"  request {st.rid}: arrival={st.request.arrival:5.1f} "
+              f"prompt={st.request.prompt_len:3d} slot={st.slot} "
+              f"tokens={st.generated[:10]}")
+    reused = {i: h for i, h in report.slot_history.items() if len(h) > 1}
+    print(f"slot reuse: {reused} (continuous batching refills freed rows)")
+    assert all(st.done for st in report.states)
     print("serve_batched OK")
 
 

@@ -21,7 +21,7 @@ is the residual stream plus one chunk's widest sub-layer working set.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import rowplan as _rp
 from repro.exec.plan import ExecutionPlan, PlanRequest
@@ -51,7 +51,118 @@ def derive_segments(modules: Sequence, h0: int, inner: str, n_rows: int,
                  for (a, b), cap in zip(cuts, caps))
 
 
-class Planner:
+# ---------------------------------------------------------------------------
+# Serving-side estimates: decode-slot bytes (policy half of repro.serve)
+# ---------------------------------------------------------------------------
+
+#: per-layer-kind decode cache byte estimators: fn(cfg, max_len, db) -> bytes
+#: for ONE slot (one batch element).  repro.serve.cache_pool registers the
+#: matching init mechanism; a new cache kind plugs into serving by adding an
+#: entry to both (see ROADMAP "Serving subsystem").
+SERVE_CACHE_BYTES: Dict[str, Callable] = {}
+
+
+def register_cache_bytes(kind: str, fn: Optional[Callable] = None):
+    """Register a per-slot byte estimator for a decode cache kind."""
+    def _do(f):
+        if kind in SERVE_CACHE_BYTES:
+            raise ValueError(f"cache kind {kind!r} already registered")
+        SERVE_CACHE_BYTES[kind] = f
+        return f
+
+    if fn is not None:
+        return _do(fn)
+    return _do
+
+
+def _kv_bytes(cfg, cache_len: int, db: int) -> int:
+    # k + v (cache_len, KV, hd) each, + the int32 "pos" scalar per slot
+    return 2 * cache_len * cfg.n_kv_heads * cfg.head_dim * db + 4
+
+
+register_cache_bytes(
+    "attn", lambda cfg, max_len, db: _kv_bytes(cfg, max_len, db))
+for _k in ("global", "shared_attn", "moe"):
+    register_cache_bytes(_k, SERVE_CACHE_BYTES["attn"])
+register_cache_bytes(
+    "local", lambda cfg, max_len, db: _kv_bytes(
+        cfg, min(cfg.sliding_window, max_len), db))
+
+
+@register_cache_bytes("mamba")
+def _mamba_state_bytes(cfg, max_len, db):
+    inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or cfg.n_heads
+    state_n = cfg.ssm_state or 64
+    h = heads * (inner // heads) * state_n * 4          # fp32 state
+    conv = (cfg.conv_k - 1) * (inner + 2 * state_n) * db
+    return h + conv
+
+
+@register_cache_bytes("mlstm")
+def _mlstm_state_bytes(cfg, max_len, db):
+    H = cfg.n_heads
+    hd = (cfg.ssm_expand * cfg.d_model) // H
+    return 4 * (H * hd * hd + H * hd + H)               # C, n, m (fp32)
+
+
+register_cache_bytes(
+    "slstm", lambda cfg, max_len, db: 4 * 4 * cfg.d_model)  # c,n,h,m fp32
+
+
+class _ServePlannerMixin:
+    """decode_slot_bytes / for_serve, mixed into :class:`Planner` below
+    (kept separate only to keep the CNN solver block readable)."""
+
+    @staticmethod
+    def decode_slot_bytes(cfg, max_len: int, enc_len: int = 0) -> int:
+        """Decode-state bytes ONE request pins for its whole lifetime: KV
+        rows for attention kinds (ring-capped for 'local'), recurrent state
+        for SSM kinds, + cross-attention K/V for enc-dec.  This is the
+        Eq. 7 accounting applied to serving — decode slots are the rows,
+        and the slot count is the granularity N the budget buys."""
+        db = 2 if cfg.dtype == "bfloat16" else 4
+        if cfg.family == "encdec":
+            # decoder layers: self-attn KV + precomputed cross K/V (no pos)
+            cross = 2 * enc_len * cfg.n_kv_heads * cfg.head_dim * db
+            return cfg.n_layers * (_kv_bytes(cfg, max_len, db) + cross)
+        total = 0
+        for kind in cfg.layer_kinds():
+            try:
+                fn = SERVE_CACHE_BYTES[kind]
+            except KeyError:
+                raise KeyError(
+                    f"no decode-cache byte estimator for layer kind "
+                    f"{kind!r}; register one with "
+                    f"repro.exec.planner.register_cache_bytes") from None
+            total += fn(cfg, max_len, db)
+        return total
+
+    @classmethod
+    def for_serve(cls, cfg, max_len: int, budget: int = 0,
+                  enc_len: int = 0, n_slots: int = 0,
+                  n_max: int = 256) -> ExecutionPlan:
+        """Size the decode cache pool: the largest slot count whose pinned
+        decode state fits ``budget`` (or an explicit ``n_slots``).  Returns
+        an ``engine="serve_pool"`` plan; ``extras`` carry the pool geometry
+        the mechanism side (repro.serve.cache_pool.CachePool) honours
+        verbatim."""
+        slot = cls.decode_slot_bytes(cfg, max_len, enc_len)
+        if not n_slots:
+            n_slots = max(1, min(n_max, budget // slot)) if budget else 1
+        est = n_slots * slot
+        extras = {"max_len": max_len, "slot_bytes": slot}
+        if cfg.family == "encdec":
+            extras["enc_len"] = enc_len
+        return ExecutionPlan(
+            engine="serve_pool", n_rows=n_slots, in_shape=None,
+            batch=n_slots, dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
+            est_bytes=est, budget=budget,
+            feasible=(budget == 0 or est < budget),
+            extras=tuple(extras.items()))
+
+
+class Planner(_ServePlannerMixin):
     """Solves (engine, N, segments) for a CNN trunk under a byte budget."""
 
     def __init__(self, modules: Sequence, in_shape: Tuple[int, int, int],

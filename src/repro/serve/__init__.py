@@ -1,0 +1,33 @@
+"""repro.serve — plan-driven continuous-batching inference.
+
+The serving transplant of LR-CNN's row-centric idea: the decode cache pool
+is a fixed byte budget, decode slots are the rows, and the scheduler reuses
+the budget across requests the way the trainer reuses it across row
+partitions.  Layering::
+
+    Request / traffic     (repro.serve.request)   what arrives
+      -> Scheduler        (repro.serve.scheduler) when it runs
+      -> ServeEngine      (repro.serve.engine)    how it computes
+      -> ExecutionPlan    (repro.exec)            what fits
+
+Policy comes from the Planner (``Planner.for_serve`` sizes the pool,
+``Planner.for_model`` chunks each prefill); mechanism is the cache pool and
+the jitted per-family step functions.  Typical use::
+
+    from repro.serve import make_requests, serve
+    reqs = make_requests(16, cfg.vocab, traffic="poisson",
+                         prompt_len=(16, 64), max_new_tokens=(8, 32),
+                         mean_interarrival=2.0)
+    report, plan = serve(params, cfg, reqs, budget=2 * 2**30)
+    print(plan.describe(), report.summary())
+"""
+
+from repro.serve.cache_pool import CachePool, register_cache_init
+from repro.serve.engine import ServeEngine
+from repro.serve.request import Phase, Request, RequestState, make_requests
+from repro.serve.scheduler import Scheduler, ServeReport, serve
+
+__all__ = [
+    "CachePool", "register_cache_init", "ServeEngine", "Phase", "Request",
+    "RequestState", "make_requests", "Scheduler", "ServeReport", "serve",
+]

@@ -1,0 +1,157 @@
+"""Fixed-slot decode cache pool — the serving instance of LR-CNN's fixed
+memory budget reused across row partitions.
+
+The pool allocates ONE persistent buffer set whose batch axis is the slot
+axis; requests borrow a slot for their lifetime (prefill writes the slot,
+decode updates it in place, eviction frees it for the next request).  Pool
+capacity is policy, not mechanism: a ``serve_pool`` :class:`ExecutionPlan`
+from :meth:`repro.exec.planner.Planner.for_serve` pins the slot count the
+byte budget buys, and the pool honours it verbatim.
+
+Cache *kinds* are a registry (mirroring the engine registry): the policy
+side registers a byte estimator with
+:func:`repro.exec.planner.register_cache_bytes`, the mechanism side
+registers the matching init here with :func:`register_cache_init`.  The
+built-in kinds reuse the model stack's cache constructors — full and ring
+KV caches (:func:`repro.models.lm.attention.init_cache`) and the SSM /
+xLSTM state shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.exec.plan import ExecutionPlan
+
+#: kind -> init(cfg, batch, max_len, dtype) -> cache pytree for one layer.
+CACHE_INITS: Dict[str, Callable] = {}
+
+
+def register_cache_init(kind: str, fn: Optional[Callable] = None):
+    """Register the mechanism half of a decode cache kind (the policy half
+    is :func:`repro.exec.planner.register_cache_bytes`)."""
+    def _do(f):
+        if kind in CACHE_INITS:
+            raise ValueError(f"cache kind {kind!r} already registered")
+        CACHE_INITS[kind] = f
+        return f
+
+    if fn is not None:
+        return _do(fn)
+    return _do
+
+
+def _block_cache_init(kind):
+    from repro.models.lm.blocks import init_block_cache
+    return lambda cfg, batch, max_len, dtype: init_block_cache(
+        kind, cfg, batch, max_len, dtype)
+
+
+for _k in ("attn", "global", "shared_attn", "moe", "local", "mamba",
+           "mlstm", "slstm"):
+    register_cache_init(_k, _block_cache_init(_k))
+
+
+def init_pool_caches(cfg, n_slots: int, max_len: int, enc_len: int = 0):
+    """Pool-shaped caches: batch axis = slot axis.  Same structure the
+    model's prefill emits, so slot writes are a pure tree-zip."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        from repro.models.lm.encdec import encdec_init_caches
+        return encdec_init_caches(cfg, n_slots, max_len, enc_len)
+    # mirror of models.lm.blocks.init_stack_caches, routed through the
+    # cache-kind registry so new kinds slot in without touching the pool
+    caches = []
+    for pat, count in cfg.scan_segments():
+        group = []
+        for kind in pat:
+            c = CACHE_INITS[kind](cfg, n_slots, max_len, dtype)
+            group.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), c))
+        caches.append(tuple(group))
+    return caches
+
+
+def _slot_axes(cfg, max_len: int, enc_len: int) -> List[int]:
+    """Per-leaf slot-axis indices, found structurally: the axis whose size
+    changes between a 1-slot and a 2-slot pool (-1 for shared leaves such
+    as ring flags, which are per-layer, not per-slot)."""
+    one = jax.eval_shape(lambda: init_pool_caches(cfg, 1, max_len, enc_len))
+    two = jax.eval_shape(lambda: init_pool_caches(cfg, 2, max_len, enc_len))
+    axes = []
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(two)):
+        diff = [i for i, (p, q) in enumerate(zip(a.shape, b.shape)) if p != q]
+        axes.append(diff[0] if diff else -1)
+    return axes
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _write_slot(pool, single, slot, *, axes):
+    lp, td = jax.tree_util.tree_flatten(pool)
+    ls = jax.tree.leaves(single)
+    out = []
+    for p, s, ax in zip(lp, ls, axes):
+        if ax < 0:
+            out.append(p)
+        else:
+            idx = (slice(None),) * ax + (slot,)
+            out.append(p.at[idx].set(jnp.take(s, 0, axis=ax)))
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+class CachePool:
+    """Slot allocator + the pooled cache buffers a ``serve_pool`` plan
+    describes.  ``owner[slot]`` is the request id currently pinned there
+    (-1 = free); ``history[slot]`` records every request the slot served —
+    the slot-reuse evidence the tests assert on."""
+
+    def __init__(self, cfg, plan: ExecutionPlan):
+        if plan.engine != "serve_pool":
+            raise ValueError(f"CachePool needs a serve_pool plan, got "
+                             f"{plan.engine!r}")
+        self.cfg = cfg
+        self.plan = plan
+        self.n_slots = plan.n_rows
+        self.max_len = int(plan.get("max_len"))
+        self.enc_len = int(plan.get("enc_len", 0))
+        self.caches = init_pool_caches(cfg, self.n_slots, self.max_len,
+                                       self.enc_len)
+        self._axes = tuple(_slot_axes(cfg, self.max_len, self.enc_len))
+        self._free = list(range(self.n_slots))
+        self.owner = [-1] * self.n_slots
+        self.history: List[List[int]] = [[] for _ in range(self.n_slots)]
+
+    # ------------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def acquire(self, rid: int) -> Optional[int]:
+        """Lowest free slot, pinned to ``rid``; None when the pool is full
+        (the request stays QUEUED — admission control under the budget)."""
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        self.owner[slot] = rid
+        self.history[slot].append(rid)
+        return slot
+
+    def release(self, slot: int) -> None:
+        if self.owner[slot] < 0:
+            raise ValueError(f"slot {slot} is already free")
+        self.owner[slot] = -1
+        self._free.append(slot)
+        self._free.sort()
+
+    def write(self, slot: int, single_cache) -> None:
+        """Install a freshly prefilled batch=1 cache into ``slot``."""
+        self.caches = _write_slot(self.caches, single_cache,
+                                  jnp.int32(slot), axes=self._axes)

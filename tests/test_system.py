@@ -7,10 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.hybrid import make_strategy_apply
-from repro.core.overlap import make_column_apply
 from repro.data.pipeline import ImageDataset, ImageDatasetConfig, \
     TokenDataset, TokenDatasetConfig
+from repro.exec import ExecutionPlan, build_apply
 from repro.models.cnn.vgg import head_apply, init_vgg16
 from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
 
@@ -19,7 +18,8 @@ def _train_cnn(strategy, n_rows, steps=40, image=32, seed=0):
     key = jax.random.PRNGKey(seed)
     mods, params = init_vgg16(key, (image, image, 3), width_mult=0.25,
                               n_classes=4, n_stages=2)
-    trunk = make_strategy_apply(mods, image, strategy, n_rows)
+    trunk = build_apply(mods, ExecutionPlan.explicit(
+        strategy, n_rows, in_shape=(image, image, 3)))
 
     def loss_fn(p, images, labels):
         logits = head_apply(p["head"], trunk(p["trunk"], images))
@@ -27,7 +27,10 @@ def _train_cnn(strategy, n_rows, steps=40, image=32, seed=0):
         return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
 
     opt = sgd_init(params)
-    cfg = SGDConfig(lr=0.05, weight_decay=0.0)
+    # lr 0.02: at 0.05 this tiny VGG reaches ~zero loss and then hits a
+    # divergence spike (loss 0 -> 163) right at the 40-step mark, which is
+    # what the final-loss assertion used to read
+    cfg = SGDConfig(lr=0.02, weight_decay=0.0)
 
     @jax.jit
     def step(p, opt, images, labels):
