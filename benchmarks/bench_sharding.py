@@ -1,0 +1,96 @@
+"""Sharded execution plans: step time and per-device peak bytes vs the
+data-axis extent at FIXED global batch.
+
+The LR-CNN angle: the planner's budget M is per accelerator, so widening
+the data axis should shrink what one device holds roughly linearly (each
+device sees batch/K) while the plan — engine, granularity N — is re-solved
+against the per-device budget.  This measures both halves: wall-clock per
+train step (fwd+bwd through the sharded engine) and the per-device peak
+bytes, analytic (``est_bytes_per_device``) and compiled
+(``memory_analysis`` on the lowered step).
+
+Standalone (forces 8 virtual CPU devices, prints BENCH JSON):
+  PYTHONPATH=src python -m benchmarks.bench_sharding
+Under ``benchmarks.run`` the extents are capped to the devices jax
+already initialised (1 on the plain CPU container).
+"""
+
+import os
+
+if __name__ == "__main__":  # must precede any jax import to take effect
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import json
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.exec import MeshSpec, Planner, build_apply
+from repro.models.cnn.vgg import init_vgg16
+
+H = 64
+GLOBAL_BATCH = 8
+BUDGET = 64 * 2**20
+EXTENTS = (1, 2, 4, 8)
+
+
+def _step_builder(mods, plan, params):
+    apply_fn = build_apply(mods, plan)
+
+    def loss(p, x):
+        return jnp.sum(apply_fn(p, x) ** 2)
+
+    return jax.jit(jax.value_and_grad(loss))
+
+
+def run() -> List[dict]:
+    shape = (H, H, 3)
+    mods, params = init_vgg16(jax.random.PRNGKey(0), shape,
+                              width_mult=0.125, n_classes=4, n_stages=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (GLOBAL_BATCH, H, H, 3))
+    n_dev = len(jax.devices())
+    rows = []
+    for k in EXTENTS:
+        if k > n_dev or GLOBAL_BATCH % k:
+            continue  # capped to initialised devices (see module docstring)
+        mesh = MeshSpec.parse(f"data={k}") if k > 1 else None
+        plan = Planner.for_budget(mods, shape, GLOBAL_BATCH, BUDGET,
+                                  mesh=mesh)
+        step = _step_builder(mods, plan, params)
+        us = time_fn(step, params["trunk"], x, iters=3, warmup=1)
+        mem = step.lower(params["trunk"], x).compile().memory_analysis()
+        temp = getattr(mem, "temp_size_in_bytes", 0)
+        rows.append({
+            "name": f"sharding/vgg_b{GLOBAL_BATCH}/data{k}",
+            "us_per_call": round(us, 1),
+            "engine": plan.engine,
+            "n_rows": plan.n_rows,
+            "data": k,
+            "est_bytes_global": plan.est_bytes,
+            "est_bytes_per_device": plan.est_bytes_per_device,
+            "temp_bytes_per_device": int(temp),
+            "feasible": plan.feasible,
+        })
+    # the headline ratio: per-device estimate shrink from 1 -> max extent
+    if len(rows) > 1:
+        rows.append({
+            "name": "sharding/vgg_b8/per_device_shrink",
+            "est_ratio": round(rows[0]["est_bytes_per_device"]
+                               / max(1, rows[-1]["est_bytes_per_device"]),
+                               2),
+            "max_data": rows[-1]["data"],
+        })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

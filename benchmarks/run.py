@@ -19,6 +19,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
     ("serving_continuous_batching", "benchmarks.bench_serving"),
+    ("sharding_data_extent", "benchmarks.bench_sharding"),
 ]
 
 

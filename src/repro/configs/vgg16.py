@@ -21,7 +21,11 @@ class CNNConfig:
     batch: int = 32
     width_mult: float = 1.0
     # plan request: pinned engine+N by default; set engine="" and a
-    # budget to let Planner.for_budget auto-select (Table I trade-offs)
+    # budget to let Planner.for_budget auto-select (Table I trade-offs).
+    # mesh="data=8" additionally shards the plan — the budget becomes
+    # per-device and the batch divides over the data axis (equivalently,
+    # pass --mesh to repro.launch.train); keep it "" for hosts whose
+    # device count is unknown at config time.
     plan: PlanRequest = PlanRequest(engine="twophase_h", n_rows=8,
                                     budget_gb=24.0)
 

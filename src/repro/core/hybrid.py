@@ -96,26 +96,3 @@ def make_hybrid_apply(modules: Sequence, h0: int,
         return x
 
     return apply
-
-
-def make_strategy_apply(modules: Sequence, h0: int, strategy: str,
-                        n_rows: int = 1, n_segments: int | None = None):
-    """Deprecated string-dispatch factory — use :mod:`repro.exec` instead::
-
-        from repro.exec import ExecutionPlan, build_apply
-        apply = build_apply(modules, ExecutionPlan.explicit(strategy, n_rows,
-                                                            in_shape=(h0, w, c)))
-
-    Kept as a thin shim over the engine registry; output is identical to
-    the registry's (same builders, same plans).
-    """
-    import warnings
-
-    from repro.exec import ExecutionPlan, build_apply
-    warnings.warn(
-        "make_strategy_apply is deprecated; use repro.exec.Planner / "
-        "build_apply (the ExecutionPlan API)", DeprecationWarning,
-        stacklevel=2)
-    plan = ExecutionPlan.explicit(strategy, n_rows, in_shape=(h0, h0, 3),
-                                  n_segments=n_segments)
-    return build_apply(modules, plan)

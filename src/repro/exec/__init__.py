@@ -11,25 +11,28 @@ The LR-CNN split, made structural:
 
 Typical use::
 
-    from repro.exec import Planner, build_apply
-    plan = Planner.for_budget(modules, (H, W, C), batch, budget_bytes)
-    print(plan.describe())           # engine, N, est bytes, feasibility
-    apply_fn = build_apply(modules, plan)
+    from repro.exec import MeshSpec, Planner, build_apply
+    plan = Planner.for_budget(modules, (H, W, C), batch, budget_bytes,
+                              mesh=MeshSpec.parse("data=8"))  # or mesh=None
+    print(plan.describe())   # engine, N, est bytes (global + per-device)
+    apply_fn = build_apply(modules, plan)   # sharded when plan.mesh is set
 """
 
-from repro.exec.plan import ExecutionPlan, PlanRequest
+from repro.exec.plan import ExecutionPlan, MeshSpec, PlanRequest
 from repro.exec.planner import (
     BUDGET_PREFERENCE, CNN_ENGINES, Planner, segment_row_capacity,
 )
 from repro.exec.registry import (
     EngineSpec, build_apply, get_engine, list_engines, register_engine,
+    register_shard_wrapper,
 )
 
-# importing the module registers the built-in engines
+# importing the module registers the built-in engines + shard wrappers
 from repro.exec import engines as _builtin_engines  # noqa: E402,F401
 
 __all__ = [
-    "ExecutionPlan", "PlanRequest", "Planner", "EngineSpec",
+    "ExecutionPlan", "MeshSpec", "PlanRequest", "Planner", "EngineSpec",
     "register_engine", "get_engine", "list_engines", "build_apply",
+    "register_shard_wrapper",
     "CNN_ENGINES", "BUDGET_PREFERENCE", "segment_row_capacity",
 ]

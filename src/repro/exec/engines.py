@@ -10,17 +10,28 @@ Sequence engines (``kind="seq"``): ``modules`` is the chunk-body callable
 (the per-token fn / scan body / attend kernel) and ``plan.n_rows`` is the
 chunk count along ``plan.get("axis", 1)``; the returned apply mirrors the
 underlying :mod:`repro.core.seqrow` helper's call shape.
+
+Sharding: engines here are single-device code.  The two *shard wrappers*
+at the bottom (one per kind, registered with ``register_shard_wrapper``)
+are the only mesh-aware layer — ``build_apply`` wraps any engine of the
+kind when ``plan.mesh`` is set, constraining the batch axis onto the data
+axis with ``NamedSharding`` (reusing :mod:`repro.launch.sharding`'s
+ShardCtx and divisibility fallback) and replicating params.  The
+constraints work identically under ``jit`` tracing and in eager (grad)
+execution, so sharded engines remain drop-in apply fns.
 """
 
 from __future__ import annotations
 
 from typing import List, Sequence
 
+import jax
+
 from repro.core import overlap as _ov
 from repro.core import seqrow as _sr
 from repro.core import twophase as _tp
 from repro.exec.plan import ExecutionPlan
-from repro.exec.registry import register_engine
+from repro.exec.registry import register_engine, register_shard_wrapper
 
 
 def _segment_specs(modules: Sequence, plan: ExecutionPlan,
@@ -127,5 +138,62 @@ def _build_seq_swa_overlap(modules, plan: ExecutionPlan):
 
     def apply(q, k, v):
         return _sr.swa_overlap_chunks(attend, q, k, v, window, plan.n_rows)
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# Shard wrappers: the mesh-aware outer layer build_apply adds per KIND
+# ---------------------------------------------------------------------------
+
+
+def _plan_ctx(plan: ExecutionPlan):
+    """ShardCtx over the plan mesh; with it active, the one constraint
+    entry point is launch.sharding.lc (logical resolve + divisibility
+    fallback + with_sharding_constraint)."""
+    from repro.launch.mesh import build_mesh
+    from repro.launch.sharding import make_plan_ctx
+    return make_plan_ctx(build_mesh(plan.mesh), plan.mesh)
+
+
+def _lc_batch0(x):
+    """Constrain an array's leading (batch) axis onto the mesh's batch
+    axes (pod x data) under the active ShardCtx."""
+    from repro.launch.sharding import lc
+    return lc(x, "batch", *(None,) * (x.ndim - 1))
+
+
+@register_shard_wrapper("cnn")
+def _shard_cnn(inner, plan: ExecutionPlan):
+    """Data-parallel CNN trunk: images shard over the batch axes, params
+    replicate (their gradient all-reduce is inserted by the partitioner).
+    Row-centric granularity N stays per-device — exactly the quantity the
+    sharded Planner solved for."""
+    from repro.launch.sharding import lc, use_ctx
+    ctx = _plan_ctx(plan)
+
+    def apply(params, x):
+        with use_ctx(ctx):
+            params = jax.tree.map(lambda l: lc(l, *(None,) * l.ndim),
+                                  params)
+            out = inner(params, _lc_batch0(x))
+            return _lc_batch0(out)
+
+    return apply
+
+
+@register_shard_wrapper("seq")
+def _shard_seq(inner, plan: ExecutionPlan):
+    """Sequence engines take positional arrays all batched on axis 0
+    (x / (carry, xs) / (q, k, v)): shard every leaf's leading axis over
+    the batch axes, run the chunked engine per-shard, constrain outputs
+    the same way."""
+    from repro.launch.sharding import use_ctx
+    ctx = _plan_ctx(plan)
+
+    def apply(*args):
+        with use_ctx(ctx):
+            out = inner(*jax.tree.map(_lc_batch0, args))
+            return jax.tree.map(_lc_batch0, out)
 
     return apply

@@ -21,6 +21,123 @@ from typing import Any, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Serializable device-mesh description — the sharding dimension of a
+    plan, kept as plain data (axis names/sizes + which axis carries data
+    parallelism and which carries model parallelism) so a plan solved on a
+    pod replays identically on any host.
+
+    The spec never touches jax device state; :func:`repro.launch.mesh.
+    build_mesh` turns it into a live ``jax.sharding.Mesh`` over the local
+    devices at execution time.
+    """
+
+    axes: Tuple[Tuple[str, int], ...]   # ordered (name, size) pairs
+    data_axis: str = "data"
+    model_axis: str = "model"
+
+    def __post_init__(self):
+        axes = tuple((str(n), int(s)) for n, s in self.axes)
+        if not axes:
+            raise ValueError("MeshSpec needs at least one axis")
+        names = [n for n, _ in axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis names in {names}")
+        for n, s in axes:
+            if s < 1:
+                raise ValueError(f"mesh axis {n!r} has size {s} < 1")
+        object.__setattr__(self, "axes", axes)
+
+    # ------------------------------------------------------------------
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axes)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(s for _, s in self.axes)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for _, s in self.axes:
+            n *= s
+        return n
+
+    def extent(self, name: str) -> int:
+        """Size of axis ``name`` (1 when the axis is absent)."""
+        for n, s in self.axes:
+            if n == name:
+                return s
+        return 1
+
+    @property
+    def data(self) -> int:
+        return self.extent(self.data_axis)
+
+    @property
+    def model(self) -> int:
+        return self.extent(self.model_axis)
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Axes the batch divides over: a "pod" axis when present plus the
+        data axis — mirroring the logical-name vocabulary in
+        launch/sharding.py (batch -> ("pod", "data")), so planner
+        accounting and executed sharding can never disagree."""
+        return tuple(n for n, _ in self.axes
+                     if n == "pod" or n == self.data_axis)
+
+    @property
+    def batch_extent(self) -> int:
+        """Data-parallel extent — what batch and budget divide by."""
+        n = 1
+        for name in self.batch_axes:
+            n *= self.extent(name)
+        return n
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse(cls, s: str) -> "MeshSpec":
+        """Parse the CLI form ``"data=8"`` / ``"data=4,model=2"`` (axis
+        order is preserved; it becomes the mesh's major-to-minor order)."""
+        axes = []
+        for part in s.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad mesh axis {part!r}; expected name=N")
+            n, v = part.split("=", 1)
+            axes.append((n.strip(), int(v)))
+        return cls(axes=tuple(axes))
+
+    def describe(self) -> str:
+        return ",".join(f"{n}={s}" for n, s in self.axes)
+
+    def to_dict(self) -> dict:
+        return {"axes": [list(a) for a in self.axes],
+                "data_axis": self.data_axis, "model_axis": self.model_axis}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MeshSpec":
+        return cls(axes=tuple(tuple(a) for a in d["axes"]),
+                   data_axis=d.get("data_axis", "data"),
+                   model_axis=d.get("model_axis", "model"))
+
+
+def batch_shards(mesh: Optional[MeshSpec], batch: int) -> int:
+    """THE per-device shard-count rule, shared by the Planner and
+    :attr:`ExecutionPlan.data_shards`: the mesh's batch extent when it
+    divides the batch evenly, else 1 (graceful replication — the
+    ``filter_spec`` divisibility fallback applied at the plan level)."""
+    if mesh is None:
+        return 1
+    k = mesh.batch_extent
+    return k if k > 0 and batch % k == 0 else 1
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanRequest:
     """What a config *asks for* — resolved to an :class:`ExecutionPlan` by
     the :class:`~repro.exec.planner.Planner` at launch time.
@@ -33,6 +150,7 @@ class PlanRequest:
     n_rows: int = 0                   # 0 = solve min N under budget
     budget_gb: float = 0.0            # activation budget M (0 = none)
     n_segments: Optional[int] = None  # hybrid/ckp segment count (None = sqrt L)
+    mesh: str = ""                    # "data=8[,model=2]"; "" = single-device
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +162,12 @@ class ExecutionPlan:
     verbatim so a logged plan replays bit-for-bit.  ``extras`` carries
     engine-specific knobs (sequence axis, SWA window, ...) as a flat tuple
     of pairs to keep the plan hashable and JSON-clean.
+
+    ``mesh`` (when set) makes sharding part of the policy: ``batch``,
+    ``est_bytes`` and ``budget`` are *global*, ``est_bytes_per_device`` /
+    ``budget // mesh.data`` are what one accelerator sees, and
+    :meth:`per_device` projects the plan onto a single device (the sub-plan
+    a one-device host replays).
     """
 
     engine: str
@@ -53,9 +177,11 @@ class ExecutionPlan:
     dtype_bytes: int = 4
     n_segments: Optional[int] = None
     segments: Tuple[Tuple[int, int, int], ...] = ()
-    est_bytes: int = 0
-    budget: int = 0          # bytes; 0 = unconstrained
+    est_bytes: int = 0       # global (sum over devices)
+    est_bytes_per_device: int = 0
+    budget: int = 0          # bytes, global; 0 = unconstrained
     feasible: bool = True
+    mesh: Optional[MeshSpec] = None
     extras: Tuple[Tuple[str, Any], ...] = ()
 
     def __post_init__(self):
@@ -65,6 +191,11 @@ class ExecutionPlan:
                            tuple(tuple(s) for s in self.segments))
         if self.in_shape is not None:
             object.__setattr__(self, "in_shape", tuple(self.in_shape))
+        if isinstance(self.mesh, dict):
+            object.__setattr__(self, "mesh", MeshSpec.from_dict(self.mesh))
+        if not self.est_bytes_per_device and self.est_bytes:
+            object.__setattr__(self, "est_bytes_per_device",
+                               self.est_bytes // self.data_shards)
 
     # ------------------------------------------------------------------
     @property
@@ -73,6 +204,29 @@ class ExecutionPlan:
         if self.in_shape is None:
             raise ValueError(f"plan for engine {self.engine!r} has no in_shape")
         return self.in_shape[0]
+
+    @property
+    def data_shards(self) -> int:
+        """Effective data-parallel shard count (pod x data axes when they
+        divide the batch evenly, else 1 — see :func:`batch_shards`)."""
+        return batch_shards(self.mesh, self.batch)
+
+    def per_device(self) -> "ExecutionPlan":
+        """Project this plan onto ONE device: the sub-plan a single-device
+        host replays (batch and budget divided by the data extent, estimates
+        per-device, mesh dropped).  Identity for unsharded plans."""
+        if self.mesh is None:
+            return self
+        k = self.data_shards
+        repl = dataclasses.replace(
+            self, mesh=None, batch=self.batch // k,
+            est_bytes=self.est_bytes_per_device,
+            est_bytes_per_device=self.est_bytes_per_device,
+            budget=self.budget // k)
+        if self.engine == "serve_pool":
+            # decode slots ARE the batch: shard the slot count too
+            repl = dataclasses.replace(repl, n_rows=max(1, self.n_rows // k))
+        return repl
 
     def get(self, key: str, default: Any = None) -> Any:
         for k, v in self.extras:
@@ -89,20 +243,26 @@ class ExecutionPlan:
     @classmethod
     def explicit(cls, engine: str, n_rows: int = 1,
                  in_shape: Optional[Tuple[int, int, int]] = None,
-                 n_segments: Optional[int] = None, **extras) -> "ExecutionPlan":
+                 n_segments: Optional[int] = None,
+                 mesh: Optional[MeshSpec] = None, **extras) -> "ExecutionPlan":
         """An unestimated plan pinning (engine, N) — the escape hatch for
-        callers that already know what they want (benchmarks, tests, the
-        deprecated ``make_strategy_apply`` shim)."""
+        callers that already know what they want (benchmarks, tests)."""
         return cls(engine=engine, n_rows=n_rows, in_shape=in_shape,
-                   n_segments=n_segments, extras=tuple(extras.items()))
+                   n_segments=n_segments, mesh=mesh,
+                   extras=tuple(extras.items()))
 
     # ------------------------------------------------------------------
     def describe(self) -> str:
         bits = [f"engine={self.engine}", f"N={self.n_rows}"]
+        if self.mesh is not None:
+            bits.append(f"mesh={self.mesh.describe()}")
         if self.segments:
             bits.append(f"segments={len(self.segments)}")
         if self.est_bytes:
             bits.append(f"est={self.est_bytes / 2**20:.1f}MiB")
+            if self.mesh is not None:
+                bits.append(
+                    f"est/dev={self.est_bytes_per_device / 2**20:.1f}MiB")
         if self.budget:
             bits.append(f"budget={self.budget / 2**20:.1f}MiB")
             bits.append(f"feasible={self.feasible}")
@@ -115,6 +275,7 @@ class ExecutionPlan:
         d["in_shape"] = list(self.in_shape) if self.in_shape else None
         d["segments"] = [list(s) for s in self.segments]
         d["extras"] = {k: v for k, v in self.extras}
+        d["mesh"] = self.mesh.to_dict() if self.mesh is not None else None
         return d
 
     @classmethod
@@ -124,6 +285,8 @@ class ExecutionPlan:
             d["in_shape"] = tuple(d["in_shape"])
         d["segments"] = tuple(tuple(s) for s in d.get("segments", ()))
         d["extras"] = tuple(sorted(d.get("extras", {}).items()))
+        if d.get("mesh") is not None:
+            d["mesh"] = MeshSpec.from_dict(d["mesh"])
         return cls(**d)
 
     def to_json(self) -> str:

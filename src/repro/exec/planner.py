@@ -16,15 +16,26 @@ and adds the two pieces the raw solvers don't have:
 Sequence-side planning (``Planner.for_model`` / ``for_budget_seq``) applies
 the same Eq. 7 logic along the token axis: the live set of a chunked block
 is the residual stream plus one chunk's widest sub-layer working set.
+
+Sharded planning (``mesh=`` on the constructor and every ``for_*``): the
+paper's budget M is *per accelerator*, so under a :class:`MeshSpec` the
+solver divides batch and budget by the data-axis extent and solves the
+same Eqs. 7-16 for what ONE device holds.  The emitted plan records global
+numbers plus ``est_bytes_per_device`` and carries the mesh, so a logged
+plan replays identically on any host (``plan.per_device()`` is the
+single-device projection).
 """
 
 from __future__ import annotations
 
 import math
+from dataclasses import replace as dataclasses_replace
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import rowplan as _rp
-from repro.exec.plan import ExecutionPlan, PlanRequest
+from repro.exec.plan import (
+    ExecutionPlan, MeshSpec, PlanRequest, batch_shards,
+)
 
 CNN_ENGINES = ("base", "ckp", "overlap", "twophase", "overlap_h",
                "twophase_h")
@@ -141,39 +152,76 @@ class _ServePlannerMixin:
     @classmethod
     def for_serve(cls, cfg, max_len: int, budget: int = 0,
                   enc_len: int = 0, n_slots: int = 0,
-                  n_max: int = 256) -> ExecutionPlan:
+                  n_max: int = 256, mesh=None) -> ExecutionPlan:
         """Size the decode cache pool: the largest slot count whose pinned
         decode state fits ``budget`` (or an explicit ``n_slots``).  Returns
         an ``engine="serve_pool"`` plan; ``extras`` carry the pool geometry
         the mechanism side (repro.serve.cache_pool.CachePool) honours
-        verbatim."""
+        verbatim.
+
+        With ``mesh=`` decode slots shard across the data axis: the global
+        ``budget`` is divided by the batch extent to get each device's
+        slice, each device pins the ``slots_per_device`` slots that slice
+        buys, and the global slot count is their product (rounded up to a
+        multiple of the extent when ``n_slots`` is pinned explicitly, so
+        the pool's slot axis always divides evenly)."""
         slot = cls.decode_slot_bytes(cfg, max_len, enc_len)
+        shards = mesh.batch_extent if mesh is not None else 1
         if not n_slots:
-            n_slots = max(1, min(n_max, budget // slot)) if budget else 1
+            if budget:
+                per_dev = max(1, min(max(1, n_max // shards),
+                                     (budget // shards) // slot))
+            else:
+                per_dev = 1
+            n_slots = per_dev * shards
+        else:
+            per_dev = -(-n_slots // shards)       # ceil: even slot sharding
+            n_slots = per_dev * shards
         est = n_slots * slot
-        extras = {"max_len": max_len, "slot_bytes": slot}
+        extras = {"max_len": max_len, "slot_bytes": slot,
+                  "slots_per_device": per_dev}
         if cfg.family == "encdec":
             extras["enc_len"] = enc_len
         return ExecutionPlan(
             engine="serve_pool", n_rows=n_slots, in_shape=None,
             batch=n_slots, dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
-            est_bytes=est, budget=budget,
-            feasible=(budget == 0 or est < budget),
-            extras=tuple(extras.items()))
+            est_bytes=est, est_bytes_per_device=per_dev * slot,
+            budget=budget,
+            feasible=(budget == 0 or per_dev * slot < budget // shards),
+            mesh=mesh, extras=tuple(extras.items()))
 
 
 class Planner(_ServePlannerMixin):
-    """Solves (engine, N, segments) for a CNN trunk under a byte budget."""
+    """Solves (engine, N, segments) for a CNN trunk under a byte budget.
+
+    With ``mesh=`` the solve is per-device: estimates use the per-device
+    batch (``batch // mesh.batch_extent``, the pod x data axes) and
+    feasibility compares against the per-device budget
+    (``budget // mesh.batch_extent``).  ``batch``/``est_bytes``/``budget``
+    on the emitted plans stay global.
+    """
 
     def __init__(self, modules: Sequence, in_shape: Tuple[int, int, int],
                  batch: int, dtype_bytes: int = 4, xi: int = 0,
-                 n_max: int = 64):
+                 n_max: int = 64, mesh: Optional[MeshSpec] = None):
         self.modules = list(modules)
         self.in_shape = tuple(in_shape)
         self.batch = batch
         self.dtype_bytes = dtype_bytes
         self.xi = xi                      # params/grads/workspace constant
         self.n_max = n_max
+        self.mesh = mesh
+        shards = mesh.batch_extent if mesh is not None else 1
+        if shards > 1 and batch % shards:
+            raise ValueError(
+                f"global batch {batch} does not divide over the mesh batch "
+                f"axes ({'x'.join(mesh.batch_axes)}={shards}); pick a "
+                f"divisible batch or a smaller data extent")
+        #: what ONE device holds — every estimate below is denominated in
+        #: this batch (xi is NOT divided: params/grads/opt replicate under
+        #: pure data parallelism)
+        self.dev_batch = batch // shards
+        self.shards = shards
 
     # ------------------------------------------------------------------
     # estimates
@@ -188,9 +236,9 @@ class Planner(_ServePlannerMixin):
 
     def _estimate_segmented(self, segments, inner: str) -> int:
         """Checkpoint bytes (segment-input maps stay live FP->BP) + worst
-        per-segment peak under the inner strategy."""
+        per-segment peak under the inner strategy.  Per-device bytes."""
         shapes = self._shapes()
-        db, B = self.dtype_bytes, self.batch
+        db, B = self.dtype_bytes, self.dev_batch
         ckpt = sum(B * shapes[a][0] * shapes[a][1] * shapes[a][2] * db
                    for a, _, _ in segments if a > 0)
         worst = 0
@@ -207,13 +255,16 @@ class Planner(_ServePlannerMixin):
     def estimate(self, engine: str, n_rows: int,
                  n_segments: Optional[int] = None,
                  segments: Tuple[Tuple[int, int, int], ...] = ()) -> int:
+        """Peak activation bytes ONE device holds (== global bytes when no
+        mesh is set)."""
         if engine in ("base",):
-            return _rp.omega_column(self.modules, self.in_shape, self.batch,
+            return _rp.omega_column(self.modules, self.in_shape,
+                                    self.dev_batch,
                                     self.dtype_bytes) + self.xi
         if engine in ("overlap", "twophase"):
-            return _rp.estimate_bytes(self.modules, self.in_shape, self.batch,
-                                      engine, n_rows, self.dtype_bytes,
-                                      self.xi)
+            return _rp.estimate_bytes(self.modules, self.in_shape,
+                                      self.dev_batch, engine, n_rows,
+                                      self.dtype_bytes, self.xi)
         if engine in INNER_STRATEGY:
             inner = INNER_STRATEGY[engine]
             segs = segments or self._segments(n_rows, inner, n_segments)
@@ -234,16 +285,27 @@ class Planner(_ServePlannerMixin):
         if engine in INNER_STRATEGY:
             segments = self._segments(n_rows, INNER_STRATEGY[engine],
                                       n_segments)
-        est = self.estimate(engine, n_rows, n_segments, segments)
+        dev_est = self.estimate(engine, n_rows, n_segments, segments)
+        dev_budget = budget // self.shards
         return ExecutionPlan(
             engine=engine, n_rows=n_rows, in_shape=self.in_shape,
             batch=self.batch, dtype_bytes=self.dtype_bytes,
-            n_segments=n_segments, segments=segments, est_bytes=est,
-            budget=budget, feasible=(budget == 0 or est < budget),
-            extras=tuple(extras.items()))
+            n_segments=n_segments, segments=segments,
+            est_bytes=dev_est * self.shards, est_bytes_per_device=dev_est,
+            budget=budget, feasible=(budget == 0 or dev_est < dev_budget),
+            mesh=self.mesh, extras=tuple(extras.items()))
 
     def resolve(self, request: PlanRequest) -> ExecutionPlan:
-        """Turn a config-level :class:`PlanRequest` into a plan."""
+        """Turn a config-level :class:`PlanRequest` into a plan.  A
+        ``request.mesh`` string ("data=8[,model=2]") overrides the
+        planner's own mesh."""
+        if request.mesh:
+            mesh = MeshSpec.parse(request.mesh)
+            if mesh != self.mesh:
+                return Planner(self.modules, self.in_shape, self.batch,
+                               self.dtype_bytes, self.xi, self.n_max,
+                               mesh=mesh).resolve(
+                                   dataclasses_replace(request, mesh=""))
         budget = int(request.budget_gb * 2**30)
         if request.engine and request.n_rows:
             return self.plan(request.engine, request.n_rows,
@@ -277,7 +339,7 @@ class Planner(_ServePlannerMixin):
                 return best
         return self.for_budget(self.modules, self.in_shape, self.batch,
                                budget, dtype_bytes=self.dtype_bytes,
-                               xi=self.xi, n_max=self.n_max)
+                               xi=self.xi, n_max=self.n_max, mesh=self.mesh)
 
     # ------------------------------------------------------------------
     # budget-driven solving
@@ -285,10 +347,12 @@ class Planner(_ServePlannerMixin):
     def solve(self, engine: str, budget: int,
               n_segments: Optional[int] = None) -> ExecutionPlan:
         """min N s.t. estimate(engine, N) < budget (Eqs. 9/10/12/16 plus
-        the Sec. IV validity bounds), as a plan."""
+        the Sec. IV validity bounds), as a plan.  Under a mesh the solve is
+        per-device: per-device batch against per-device budget."""
         if engine in ("base", "overlap", "twophase"):
-            r = _rp.solve_n(self.modules, self.in_shape, self.batch, budget,
-                            engine, self.dtype_bytes, self.xi, self.n_max)
+            r = _rp.solve_n(self.modules, self.in_shape, self.dev_batch,
+                            budget // self.shards, engine, self.dtype_bytes,
+                            self.xi, self.n_max)
             return self.plan(engine, max(1, r.n_rows), budget=budget)
         if engine == "ckp":  # granularity-free: one estimate
             return self.plan(engine, 1, n_segments, budget=budget)
@@ -309,16 +373,19 @@ class Planner(_ServePlannerMixin):
     def for_budget(cls, modules: Sequence, in_shape: Tuple[int, int, int],
                    batch: int, budget: int, dtype_bytes: int = 4,
                    xi: int = 0, n_max: int = 64,
-                   candidates: Sequence[str] = BUDGET_PREFERENCE
-                   ) -> ExecutionPlan:
+                   candidates: Sequence[str] = BUDGET_PREFERENCE,
+                   mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
         """Auto-select strategy *and* granularity under a byte budget.
 
         Tries ``candidates`` in order of increasing runtime overhead
         (Table I / Fig. 8) and returns the first feasible plan; if nothing
         fits, returns the infeasible plan with the smallest estimate so the
-        caller can see how far over budget it is.
+        caller can see how far over budget it is.  With ``mesh=`` both the
+        batch and the budget are divided over the data axis (per-device
+        solve); the returned plan carries the mesh.
         """
-        planner = cls(modules, in_shape, batch, dtype_bytes, xi, n_max)
+        planner = cls(modules, in_shape, batch, dtype_bytes, xi, n_max,
+                      mesh=mesh)
         best: Optional[ExecutionPlan] = None
         for engine in candidates:
             p = planner.solve(engine, budget)
@@ -342,14 +409,21 @@ class Planner(_ServePlannerMixin):
         stream = batch * seq_len * d_model * dtype_bytes
         return stream + batch * chunk_tokens * width * dtype_bytes
 
+    # graceful per-device shard count (mesh batch extent if it divides the
+    # batch, else replicate) — ONE rule, shared with ExecutionPlan.data_shards
+    _seq_shards = staticmethod(batch_shards)
+
     @classmethod
     def for_budget_seq(cls, seq_len: int, d_model: int, batch: int,
                        budget: int, d_ff: int = 0,
                        engine: str = "seq_chunked", window: int = 0,
                        axis: int = 1, dtype_bytes: int = 4,
-                       n_max: int = 64) -> ExecutionPlan:
-        """Smallest chunk count (dividing ``seq_len``) that fits ``budget``;
-        infeasible plan at the largest divisor otherwise."""
+                       n_max: int = 64,
+                       mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
+        """Smallest chunk count (dividing ``seq_len``) that fits ``budget``
+        (per-device under a mesh); infeasible plan at the largest divisor
+        otherwise."""
+        shards = cls._seq_shards(mesh, batch)
         divisors = [n for n in range(1, min(n_max, seq_len) + 1)
                     if seq_len % n == 0]
         extras = {"axis": axis, "seq": seq_len, "d_model": d_model}
@@ -357,24 +431,26 @@ class Planner(_ServePlannerMixin):
             extras["window"] = window
         best = None
         for n in divisors:
-            est = cls.seq_estimate(seq_len, d_model, batch, n, d_ff, window,
-                                   dtype_bytes)
+            est = cls.seq_estimate(seq_len, d_model, batch // shards, n,
+                                   d_ff, window, dtype_bytes)
             plan = ExecutionPlan(
                 engine=engine, n_rows=n, in_shape=None, batch=batch,
-                dtype_bytes=dtype_bytes, est_bytes=est, budget=budget,
-                feasible=(budget == 0 or est < budget),
-                extras=tuple(extras.items()))
+                dtype_bytes=dtype_bytes, est_bytes=est * shards,
+                est_bytes_per_device=est, budget=budget,
+                feasible=(budget == 0 or est < budget // shards),
+                mesh=mesh, extras=tuple(extras.items()))
             if plan.feasible:
                 return plan
             best = plan
         return best
 
     @classmethod
-    def for_model(cls, cfg, batch: int, seq_len: int,
-                  budget: int = 0) -> ExecutionPlan:
+    def for_model(cls, cfg, batch: int, seq_len: int, budget: int = 0,
+                  mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
         """Sequence plan for a :class:`~repro.models.lm.config.ModelConfig`:
         engine from the layer pattern, N from the budget (or the config's
-        ``row_chunks`` when unconstrained)."""
+        ``row_chunks`` when unconstrained).  ``mesh=`` makes the budget
+        per-device, exactly as on the CNN side."""
         kinds = set(cfg.layer_kinds())
         if kinds & {"mamba", "mlstm", "slstm"}:
             engine, window = "seq_carry_scan", 0
@@ -386,16 +462,20 @@ class Planner(_ServePlannerMixin):
         if budget:
             return cls.for_budget_seq(seq_len, cfg.d_model, batch, budget,
                                       d_ff=cfg.d_ff, engine=engine,
-                                      window=window, dtype_bytes=dtype_bytes)
+                                      window=window, dtype_bytes=dtype_bytes,
+                                      mesh=mesh)
+        shards = cls._seq_shards(mesh, batch)
         n = max(1, cfg.row_chunks)
-        est = cls.seq_estimate(seq_len, cfg.d_model, batch, n, cfg.d_ff,
-                               window, dtype_bytes)
+        est = cls.seq_estimate(seq_len, cfg.d_model, batch // shards, n,
+                               cfg.d_ff, window, dtype_bytes)
         extras = {"axis": 1, "seq": seq_len, "d_model": cfg.d_model}
         if window:
             extras["window"] = window
         return ExecutionPlan(engine=engine, n_rows=n, in_shape=None,
                              batch=batch, dtype_bytes=dtype_bytes,
-                             est_bytes=est, extras=tuple(extras.items()))
+                             est_bytes=est * shards,
+                             est_bytes_per_device=est, mesh=mesh,
+                             extras=tuple(extras.items()))
 
 
 def segment_row_capacity(modules: Sequence, h0: int, inner: str,

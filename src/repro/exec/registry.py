@@ -4,8 +4,17 @@ seam between execution plans (policy) and row-centric mechanisms.
 Every engine — the six CNN trunk strategies *and* the three sequence-axis
 transplants — registers here under a string key, so CNN trunks and LM
 sequence chunking are two instances of one abstraction.  Future backends
-(sharded plans, async boundary-cache prefetch, multi-backend kernels) plug
-in with ``register_engine`` without touching any call site.
+(async boundary-cache prefetch, multi-backend kernels) plug in with
+``register_engine`` without touching any call site.
+
+Sharding is layered HERE, not in the engines: when ``plan.mesh`` is set,
+``build_apply`` wraps the engine's apply fn in a mesh-aware outer layer
+(a *shard wrapper*, registered per engine *kind* with
+``register_shard_wrapper``) that maps the batch axis onto the mesh's data
+axis via ``NamedSharding`` constraints.  Engines stay single-device code;
+one wrapper per kind shards all of them — a kind without a wrapper (e.g.
+``serve``, whose ServeEngine/CachePool consume ``plan.mesh`` themselves)
+passes through untouched.
 """
 
 from __future__ import annotations
@@ -16,6 +25,8 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.exec.plan import ExecutionPlan
 
 Builder = Callable[[Any, ExecutionPlan], Callable]
+#: wrap(inner_apply, plan) -> sharded_apply, keyed by EngineSpec.kind
+ShardWrapper = Callable[[Callable, ExecutionPlan], Callable]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +73,46 @@ def list_engines(kind: Optional[str] = None) -> List[str]:
                   if kind is None or s.kind == kind)
 
 
+_SHARD_WRAPPERS: Dict[str, ShardWrapper] = {}
+
+
+def register_shard_wrapper(kind: str, wrap: Optional[ShardWrapper] = None):
+    """Register the mesh-aware outer layer for every engine of ``kind``.
+
+    ``wrap(inner_apply, plan)`` receives the single-device apply fn an
+    engine built and must return one that executes it over
+    ``plan.mesh``'s data axis.  Registering a new engine *kind* therefore
+    needs exactly one wrapper to make all its engines shardable —
+    individual engines never see the mesh.
+    """
+    def _do(fn: ShardWrapper) -> ShardWrapper:
+        if kind in _SHARD_WRAPPERS:
+            raise ValueError(f"shard wrapper for kind {kind!r} already "
+                             f"registered")
+        _SHARD_WRAPPERS[kind] = fn
+        return fn
+
+    if wrap is not None:
+        return _do(wrap)
+    return _do
+
+
 def build_apply(modules, plan: ExecutionPlan) -> Callable:
     """Resolve ``plan.engine`` in the registry and build its apply fn.
 
     CNN engines return ``apply(params, x)``; sequence engines return the
     call shape of their underlying helper (see :mod:`repro.exec.engines`).
+
+    When ``plan.mesh`` is set (and spans more than one device), the apply
+    fn is additionally wrapped in the kind's shard wrapper, so the SAME
+    plan object that solved the per-device budget also pins how the batch
+    maps onto the mesh — policy and placement travel together.
     """
-    return get_engine(plan.engine).build(modules, plan)
+    spec = get_engine(plan.engine)
+    inner = spec.build(modules, plan)
+    if plan.mesh is None or plan.mesh.n_devices <= 1:
+        return inner
+    wrap = _SHARD_WRAPPERS.get(spec.kind)
+    if wrap is None:
+        return inner  # kind consumes plan.mesh itself (e.g. serve_pool)
+    return wrap(inner, plan)

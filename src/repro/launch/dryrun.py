@@ -22,7 +22,7 @@ from repro.analysis.costmodel import analyze as cost_analyze
 from repro.analysis.roofline import analyze
 from repro.configs import get_config, list_configs
 from repro.exec import Planner
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, production_mesh_spec
 from repro.launch.steps import SHAPES, build_jitted, shape_applicable
 
 
@@ -38,9 +38,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
            "fsdp": fsdp, "overrides": overrides or {},
            "status": "skipped"}
     # the resolved row-centric execution plan is part of the record so a
-    # dry-run artefact fully determines how the step would execute
-    rec["exec_plan"] = Planner.for_model(cfg, shape.batch,
-                                         shape.seq).to_dict()
+    # dry-run artefact fully determines how the step would execute — the
+    # plan is solved against THIS mesh (per-device batch), and its
+    # single-device projection rides along so the artefact replays on
+    # any host
+    plan = Planner.for_model(cfg, shape.batch, shape.seq,
+                             mesh=production_mesh_spec(multi_pod=multi_pod))
+    rec["exec_plan"] = plan.to_dict()
+    rec["exec_plan_per_device"] = plan.per_device().to_dict()
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         rec["reason"] = why

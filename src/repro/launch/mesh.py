@@ -1,4 +1,6 @@
-"""Production mesh definitions (TPU v5e pods; 256 chips/pod).
+"""Production mesh definitions (TPU v5e pods; 256 chips/pod) plus the
+bridge from a plan's serializable :class:`~repro.exec.plan.MeshSpec` to a
+live ``jax.sharding.Mesh``.
 
 Factory functions only — importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import; smoke tests see
@@ -8,12 +10,41 @@ the single real CPU device).
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+from repro.exec.plan import MeshSpec
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def production_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    """The production meshes above, as plan-embeddable specs."""
+    if multi_pod:
+        return MeshSpec(axes=(("pod", 2), ("data", 16), ("model", 16)))
+    return MeshSpec(axes=(("data", 16), ("model", 16)))
+
+
+def build_mesh(spec: MeshSpec, devices=None):
+    """Realize a plan's :class:`MeshSpec` over the local devices.
+
+    Raises with a pointer to ``plan.per_device()`` when the host has fewer
+    devices than the spec asks for — a logged sharded plan still replays
+    on one device through its per-device sub-plan.
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = spec.n_devices
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh {spec.describe()} needs {n} devices but the host has "
+            f"{len(devs)}; replay the plan's single-device projection "
+            f"(plan.per_device()) or raise "
+            f"--xla_force_host_platform_device_count")
+    arr = np.asarray(devs[:n], dtype=object).reshape(spec.shape)
+    return jax.sharding.Mesh(arr, spec.axis_names)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):

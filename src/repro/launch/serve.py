@@ -42,15 +42,22 @@ def main():
                          "of a fixed --prompt-len P")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec (e.g. data=2): the global "
+                         "--budget-gb is divided by the data extent into "
+                         "per-device slices and decode slots shard across "
+                         "the data axis")
     args = ap.parse_args()
 
     import jax
 
     from repro.configs import get_config, get_reduced
+    from repro.exec import MeshSpec
     from repro.models.lm import encdec as ED
     from repro.models.lm import model as LM
     from repro.serve import make_requests, serve
 
+    mesh_spec = MeshSpec.parse(args.mesh) if args.mesh else None
     cfg = get_reduced(args.arch) if args.preset == "reduced" \
         else get_config(args.arch)
     n_requests = args.requests or args.batch
@@ -86,7 +93,7 @@ def main():
     report, plan = serve(params, cfg, requests, budget=budget,
                          n_slots=0 if budget else args.batch,
                          enc_len=enc_len, prefill_budget=budget,
-                         walltime_fn=time.perf_counter)
+                         mesh=mesh_spec, walltime_fn=time.perf_counter)
     wall = time.perf_counter() - t0
 
     print("pool plan:", plan.describe())

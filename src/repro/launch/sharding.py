@@ -91,6 +91,24 @@ def make_ctx(mesh: Mesh, *, fsdp: bool = False, seq_sharded: bool = False,
     return ShardCtx(mesh, logical)
 
 
+def make_plan_ctx(mesh: Mesh, spec) -> ShardCtx:
+    """ShardCtx for an ExecutionPlan's :class:`~repro.exec.plan.MeshSpec`:
+    batch over the spec's data axis (plus a leading "pod" axis when the
+    mesh has one), tensor/expert parallelism over its model axis.  This is
+    what the engine shard wrappers (repro.exec.engines) resolve logical
+    names against."""
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", spec.data_axis) if a in axes)
+    model = (spec.model_axis,) if spec.model_axis in axes else None
+    return ShardCtx(mesh, {
+        "batch": batch or None,
+        "tp": model,
+        "expert": model,
+        "fsdp": None,
+        "seq": None,
+    })
+
+
 @contextlib.contextmanager
 def use_ctx(ctx: Optional[ShardCtx]):
     prev = _current()

@@ -10,9 +10,13 @@ Two modes:
         (Planner.for_budget picks engine + N under the byte budget and
         prints the resolved ExecutionPlan; works for LM archs too, where
         the budget drives the sequence-chunk count)
+* sharded: add --mesh data=8 (with XLA_FLAGS=--xla_force_host_platform_\
+            device_count=8 on CPU hosts): the Planner solves the SAME
+            budget per-device (batch and budget divided by the data
+            extent), the resolved plan carries the mesh, and execution
+            shards the batch across it — CNN via the registry's shard
+            wrapper, LM via in_shardings from launch.steps.
 
-On this container the mesh is the local CPU host mesh; on a real pod the
-same code runs under make_production_mesh() (the dry-run proves lowering).
 Checkpoints + metrics land in --out.
 """
 
@@ -41,20 +45,23 @@ def train_lm(args):
     import dataclasses
 
     from repro.configs import get_config, get_reduced
-    from repro.exec import Planner
+    from repro.exec import MeshSpec, Planner
     from repro.models.lm import model as LM
     from repro.models.lm import encdec as ED
     from repro.launch.steps import make_train_step
 
+    mesh_spec = MeshSpec.parse(args.mesh) if args.mesh else None
     cfg = get_reduced(args.arch) if args.preset == "reduced" \
         else get_config(args.arch)
     if args.row_chunks:
         cfg = dataclasses.replace(cfg, row_chunks=args.row_chunks)
     if args.budget_gb and not args.row_chunks:  # explicit --row-chunks wins
         # budget-driven sequence-axis plan: pick the chunk count (Eq. 7
-        # along the token axis) and engine from the layer pattern
+        # along the token axis, per-device under --mesh) and engine from
+        # the layer pattern
         plan = Planner.for_model(cfg, args.batch, args.seq,
-                                 budget=int(args.budget_gb * 2**30))
+                                 budget=int(args.budget_gb * 2**30),
+                                 mesh=mesh_spec)
         print("plan:", plan.describe())
         # row_chunks only takes effect under a rows-remat policy
         remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat,
@@ -65,11 +72,30 @@ def train_lm(args):
     params = init(key, cfg)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"row_chunks={cfg.row_chunks} remat={cfg.remat}")
+          f"row_chunks={cfg.row_chunks} remat={cfg.remat}"
+          + (f" mesh={mesh_spec.describe()}" if mesh_spec else ""))
 
     opt_cfg = AdamWConfig(lr=args.lr)
     state = {"params": params, "opt": adamw_init(params)}
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+    if mesh_spec is not None:
+        # sharded step: params/opt by the LM rules, batch over the data
+        # axis — the same spec trees the dry-run lowers with
+        from repro.launch.mesh import build_mesh
+        from repro.launch.steps import (
+            ShapeSpec, batch_sharding, batch_specs, make_shape_ctx,
+            state_sharding,
+        )
+        mesh = build_mesh(mesh_spec)
+        shape_spec = ShapeSpec("cli", "train", args.seq, args.batch)
+        ctx = make_shape_ctx(mesh, cfg, shape_spec)
+        st_shard = state_sharding(ctx, state)
+        b_shard = batch_sharding(ctx, batch_specs(cfg, shape_spec))
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, ctx=ctx),
+                          in_shardings=(st_shard, b_shard),
+                          out_shardings=(st_shard, None),
+                          donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
 
     ds = TokenDataset(TokenDatasetConfig(vocab=cfg.vocab, seq_len=args.seq,
                                          batch=args.batch, seed=args.seed))
@@ -112,8 +138,9 @@ def train_cnn(args):
     mod = importlib.import_module(f"repro.configs.{args.arch}")
     ccfg = mod.reduced() if args.preset == "reduced" else mod.CONFIG
 
-    from repro.exec import Planner, build_apply
+    from repro.exec import MeshSpec, Planner, build_apply
     from repro.models.cnn import resnet, vgg
+    mesh_spec = MeshSpec.parse(args.mesh) if args.mesh else None
     key = jax.random.PRNGKey(args.seed)
     shape = (ccfg.image, ccfg.image, ccfg.channels)
     if ccfg.arch == "vgg16":
@@ -139,8 +166,10 @@ def train_cnn(args):
         req = dataclasses.replace(req, n_rows=args.rows)
     # the paper's ξ: params + grads + optimizer state live beside activations
     xi = 3 * sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params))
-    plan = Planner(mods, shape, batch, xi=xi).resolve(req)
+    plan = Planner(mods, shape, batch, xi=xi, mesh=mesh_spec).resolve(req)
     print("plan:", plan.describe())
+    # plan.mesh makes build_apply wrap the engine in the data-parallel
+    # shard wrapper; no sharding code in the trainer itself
     trunk_apply = build_apply(mods, plan)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     print(f"arch={ccfg.arch} engine={plan.engine} N={plan.n_rows} "
@@ -198,7 +227,12 @@ def main():
     ap.add_argument("--rows", type=int, default=0)
     ap.add_argument("--budget-gb", type=float, default=0.0,
                     help="activation byte budget; Planner.for_budget "
-                         "auto-selects engine and granularity under it")
+                         "auto-selects engine and granularity under it "
+                         "(per-device when combined with --mesh)")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. data=8 or data=4,model=2: "
+                         "batch and budget divide over the data axis and "
+                         "the resolved plan is sharded")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")

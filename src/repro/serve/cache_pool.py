@@ -121,9 +121,36 @@ class CachePool:
         self.caches = init_pool_caches(cfg, self.n_slots, self.max_len,
                                        self.enc_len)
         self._axes = tuple(_slot_axes(cfg, self.max_len, self.enc_len))
+        self.mesh = None
+        if plan.mesh is not None and plan.mesh.n_devices > 1:
+            self._shard_pool()
         self._free = list(range(self.n_slots))
         self.owner = [-1] * self.n_slots
         self.history: List[List[int]] = [[] for _ in range(self.n_slots)]
+
+    def _shard_pool(self) -> None:
+        """Place the pool buffers with the slot axis sharded over the
+        plan mesh's data axis — each device pins ``slots_per_device``
+        slots' decode state, which is exactly the per-device byte
+        accounting ``Planner.for_serve`` solved (slot counts are always a
+        multiple of the data extent).  Shared (non-per-slot) leaves
+        replicate."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import build_mesh
+        from repro.launch.sharding import filter_spec
+        self.mesh = build_mesh(self.plan.mesh)
+        batch_axes = self.plan.mesh.batch_axes
+
+        def _place(leaf, ax):
+            entries = [None] * leaf.ndim
+            if ax >= 0 and batch_axes:
+                entries[ax] = batch_axes
+            spec = filter_spec(P(*entries), leaf.shape, self.mesh)
+            return jax.device_put(leaf, NamedSharding(self.mesh, spec))
+
+        leaves, td = jax.tree_util.tree_flatten(self.caches)
+        self.caches = jax.tree_util.tree_unflatten(
+            td, [_place(l, ax) for l, ax in zip(leaves, self._axes)])
 
     # ------------------------------------------------------------------
     @property

@@ -73,6 +73,16 @@ class ServeEngine:
         self.max_len = int(plan.get("max_len"))
         self.enc_len = int(plan.get("enc_len", 0))
         self.prefill_budget = prefill_budget
+        self.mesh = None
+        if plan.mesh is not None and plan.mesh.n_devices > 1:
+            # replicate params over the plan mesh; batched decode then
+            # follows the pool caches' slot-axis sharding (the CachePool
+            # places those), so each device decodes its own slots
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.mesh import build_mesh
+            self.mesh = build_mesh(plan.mesh)
+            repl = NamedSharding(self.mesh, P())
+            self.params = jax.device_put(params, repl)
         if cfg.family == "encdec":
             from repro.models.lm import encdec as ED
             self._decode = jax.jit(

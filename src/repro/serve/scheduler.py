@@ -199,10 +199,13 @@ class Scheduler:
 def serve(params, cfg, requests: Sequence[Request], *,
           budget: int = 0, n_slots: int = 0, max_len: int = 0,
           enc_len: int = 0, prefill_budget: int = 0,
-          mode: str = "continuous",
+          mode: str = "continuous", mesh=None,
           walltime_fn: Optional[Callable[[], float]] = None):
     """One-call serving loop: plan the pool, build engine + pool +
-    scheduler, run to completion.  Returns (report, plan)."""
+    scheduler, run to completion.  Returns (report, plan).
+
+    ``mesh=`` (a :class:`~repro.exec.plan.MeshSpec`) makes the budget
+    per-device and shards the decode-slot pool across the data axis."""
     from repro.exec.planner import Planner
     if not max_len:
         need = max(r.prompt_len + r.max_new_tokens for r in requests)
@@ -211,8 +214,12 @@ def serve(params, cfg, requests: Sequence[Request], *,
         max_len = need
     # more slots than requests would only widen every decode step
     plan = Planner.for_serve(cfg, max_len, budget=budget, enc_len=enc_len,
-                             n_slots=n_slots,
+                             n_slots=n_slots, mesh=mesh,
                              n_max=max(1, min(256, len(requests))))
+    if mesh is not None and prefill_budget:
+        # a request's chunked prefill runs unsharded on one device, so it
+        # must fit the PER-DEVICE slice of the budget, like everything else
+        prefill_budget //= max(1, mesh.batch_extent)
     engine = ServeEngine(params, cfg, plan, prefill_budget=prefill_budget)
     pool = CachePool(cfg, plan)
     report = Scheduler(engine, pool, requests, mode=mode,

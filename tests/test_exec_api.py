@@ -1,7 +1,7 @@
 """The repro.exec Plan/Engine API: registry completeness, budget round-trip
 (Planner -> ExecutionPlan -> build_apply) exactness vs the column baseline
-for every registered engine, shim deprecation + bit-for-bit parity, and
-plan serialization."""
+for every registered engine, and plan serialization.  (Sharded plans are
+covered in tests/test_sharded_plans.py on 8 virtual devices.)"""
 
 import jax
 import jax.numpy as jnp
@@ -205,19 +205,13 @@ def test_for_model_picks_engine_by_family():
 
 
 # ---------------------------------------------------------------------------
-# deprecated shim
+# deprecated shim: deleted (PR 3) — the registry is the only entry point
 # ---------------------------------------------------------------------------
 
 
-def test_make_strategy_apply_deprecated_and_bit_exact():
-    from repro.core.hybrid import make_strategy_apply
-    for engine, n in (("base", 1), ("twophase", 2), ("overlap", 3),
-                      ("ckp", 1), ("twophase_h", 3), ("overlap_h", 3)):
-        with pytest.warns(DeprecationWarning, match="repro.exec"):
-            shim = make_strategy_apply(MODS, H, engine, n)
-        reg = build_apply(MODS, ExecutionPlan.explicit(engine, n, SHAPE))
-        assert bool(jnp.array_equal(shim(PARAMS["trunk"], X),
-                                    reg(PARAMS["trunk"], X)))
+def test_make_strategy_apply_is_gone():
+    import repro.core.hybrid as hybrid
+    assert not hasattr(hybrid, "make_strategy_apply")
 
 
 # ---------------------------------------------------------------------------

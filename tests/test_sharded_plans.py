@@ -1,0 +1,254 @@
+"""Sharded execution plans: mesh spec serialization, per-device budget
+math, and shard parity — loss/grads from sharded 2PS/OverL/hybrid and
+seqrow engines must match single-device execution within float tolerance,
+and decode-slot pools must produce identical tokens sharded or not.
+
+The execution tests need 8 virtual devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_sharded_plans.py
+
+Under the plain tier-1 run (one real CPU device) they skip; the plan-math
+and serialization tests run everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.overlap import make_column_apply
+from repro.exec import (
+    ExecutionPlan, MeshSpec, PlanRequest, Planner, build_apply,
+)
+from repro.models.cnn.vgg import init_vgg16
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+H, BATCH = 64, 8
+SHAPE = (H, H, 3)
+KEY = jax.random.PRNGKey(0)
+MODS, PARAMS = init_vgg16(KEY, SHAPE, width_mult=0.125, n_classes=4,
+                          n_stages=3)
+X = jax.random.normal(jax.random.PRNGKey(1), (BATCH, H, H, 3))
+MESH8 = MeshSpec.parse("data=8")
+
+
+def _grads(apply_fn, params, x):
+    def loss(p, xx):
+        return jnp.sum(apply_fn(p, xx) ** 2)
+    return jax.value_and_grad(loss)(params, x)
+
+
+def _max_rel(a, b):
+    out = 0.0
+    for l1, l2 in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        denom = float(jnp.abs(l1).max())
+        if denom > 0:
+            out = max(out, float(jnp.abs(l1 - l2).max()) / denom)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MeshSpec: parse / validate / serialize (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_spec_parse_and_extents():
+    m = MeshSpec.parse("data=4,model=2")
+    assert m.axis_names == ("data", "model") and m.shape == (4, 2)
+    assert m.data == 4 and m.model == 2 and m.n_devices == 8
+    assert MeshSpec.parse("data=8").model == 1  # absent axis -> extent 1
+    assert MeshSpec.parse("data=8").describe() == "data=8"
+
+
+def test_mesh_spec_validates():
+    with pytest.raises(ValueError, match="name=N"):
+        MeshSpec.parse("8")
+    with pytest.raises(ValueError, match="duplicate"):
+        MeshSpec(axes=(("data", 2), ("data", 4)))
+    with pytest.raises(ValueError, match="size"):
+        MeshSpec(axes=(("data", 0),))
+
+
+def test_sharded_plan_json_roundtrip():
+    planner = Planner(MODS, SHAPE, BATCH, mesh=MESH8)
+    for engine in ("twophase", "overlap", "twophase_h"):
+        plan = planner.plan(engine, n_rows=2, budget=32 * 2**20)
+        assert plan.mesh == MESH8
+        rt = ExecutionPlan.from_json(plan.to_json())
+        assert rt == plan
+        assert rt.mesh.data == 8
+        assert rt.est_bytes_per_device == plan.est_bytes_per_device
+
+
+def test_per_device_projection_matches_single_device_solve():
+    """plan.per_device() must be the plan a single-device planner solves
+    for batch/K under budget/K — the replay-anywhere guarantee."""
+    budget = 32 * 2**20
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH8).plan(
+        "twophase", 2, budget=budget)
+    sub = plan.per_device()
+    assert sub.mesh is None and sub.batch == BATCH // 8
+    assert sub.budget == budget // 8
+    solo = Planner(MODS, SHAPE, BATCH // 8).plan("twophase", 2,
+                                                 budget=budget // 8)
+    assert sub.est_bytes == solo.est_bytes
+    assert sub.feasible == solo.feasible
+
+
+def test_per_device_budget_accounting():
+    """The solve is per-device: a feasible sharded plan's per-device bytes
+    fit budget/K, and est_bytes reports the global sum of both."""
+    budget = 64 * 2**20
+    plan = Planner.for_budget(MODS, SHAPE, BATCH, budget, mesh=MESH8)
+    assert plan.feasible
+    assert plan.est_bytes_per_device <= budget // 8
+    assert plan.est_bytes == plan.est_bytes_per_device * 8
+    d = plan.to_dict()
+    assert d["est_bytes"] == plan.est_bytes
+    assert d["est_bytes_per_device"] == plan.est_bytes_per_device
+
+
+def test_planner_rejects_non_divisible_batch():
+    with pytest.raises(ValueError, match="does not divide"):
+        Planner(MODS, SHAPE, 6, mesh=MESH8)
+
+
+def test_plan_request_mesh_string():
+    plan = Planner(MODS, SHAPE, BATCH).resolve(
+        PlanRequest(engine="twophase", n_rows=2, mesh="data=8"))
+    assert plan.mesh == MESH8 and plan.batch == BATCH
+
+
+def test_multi_pod_batch_extent():
+    """A "pod" axis is a batch axis (launch/sharding.py's vocabulary), so
+    per-device accounting must divide by pod x data — not data alone."""
+    from repro.configs import get_reduced
+    m = MeshSpec.parse("pod=2,data=4,model=2")
+    assert m.batch_axes == ("pod", "data") and m.batch_extent == 8
+    plan = Planner.for_model(get_reduced("llama3_2_3b"), 16, 128, mesh=m)
+    solo = Planner.for_model(get_reduced("llama3_2_3b"), 16 // 8, 128)
+    assert plan.est_bytes_per_device == solo.est_bytes
+    assert plan.per_device().batch == 2
+
+
+def test_for_serve_shards_slots():
+    from repro.configs import get_reduced
+    cfg = get_reduced("qwen1_5_4b")
+    slot = Planner.decode_slot_bytes(cfg, 64)
+    mesh = MeshSpec.parse("data=2")
+    plan = Planner.for_serve(cfg, 64, budget=int(4.5 * slot), mesh=mesh)
+    # per-device budget buys 2 slots -> 4 global, 2 pinned per device
+    assert plan.n_rows == 4 and plan.get("slots_per_device") == 2
+    assert plan.est_bytes_per_device == 2 * slot
+    assert plan.per_device().n_rows == 2
+
+
+# ---------------------------------------------------------------------------
+# shard parity: sharded engines == single-device execution (8 devices)
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("engine,n", [("twophase", 2), ("overlap", 4),
+                                      ("twophase_h", 3), ("overlap_h", 3)])
+def test_cnn_shard_parity(engine, n):
+    ref_fn = make_column_apply(MODS)
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH8).plan(engine, n)
+    fn = build_apply(MODS, plan)
+    ref = ref_fn(PARAMS["trunk"], X)
+    got = fn(PARAMS["trunk"], X)
+    assert jnp.allclose(got, ref, atol=1e-5)
+    # output really lands sharded over the data axis
+    assert "data" in str(got.sharding.spec)
+    l_ref, g_ref = _grads(ref_fn, PARAMS["trunk"], X)
+    l_got, g_got = _grads(fn, PARAMS["trunk"], X)
+    # data-parallel grad all-reduce reassociates float sums -> tolerance,
+    # not bitwise (same budget the seqrow tests give fp reassociation)
+    assert abs(float(l_got) - float(l_ref)) / abs(float(l_ref)) < 1e-5
+    assert _max_rel(g_ref, g_got) < 1e-4
+
+
+@needs_devices
+def test_seq_chunked_shard_parity():
+    x = jax.random.normal(KEY, (8, 32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    fn = lambda u: jnp.tanh(u @ w)  # noqa: E731
+    apply = build_apply(fn, ExecutionPlan.explicit("seq_chunked", 4, axis=1,
+                                                   mesh=MESH8))
+    assert jnp.allclose(apply(x), fn(x), atol=1e-6)
+    g1 = jax.grad(lambda xx: jnp.sum(fn(xx) ** 2))(x)
+    g2 = jax.grad(lambda xx: jnp.sum(apply(xx) ** 2))(x)
+    assert jnp.allclose(g1, g2, rtol=1e-5, atol=1e-5)
+
+
+@needs_devices
+def test_seq_carry_scan_shard_parity():
+    x = jax.random.normal(KEY, (8, 32, 8))
+
+    def body(carry, chunk):
+        def step(c, xt):
+            return 0.9 * c + 0.1 * xt, 0.9 * c + 0.1 * xt
+        carry, ys = jax.lax.scan(step, carry, jnp.moveaxis(chunk, 1, 0))
+        return carry, jnp.moveaxis(ys, 0, 1)
+
+    c0 = jnp.zeros((8, 8))
+    ref_c, ref = body(c0, x)
+    apply = build_apply(body, ExecutionPlan.explicit(
+        "seq_carry_scan", 4, axis=1, mesh=MESH8))
+    got_c, got = apply(c0, x)
+    assert jnp.allclose(got, ref, atol=1e-6)
+    assert jnp.allclose(got_c, ref_c, atol=1e-6)
+
+
+@needs_devices
+def test_hybrid_sharded_replay_from_json():
+    """Acceptance: a logged sharded plan replays through JSON — and its
+    per-device sub-plan executes on the equivalent single-device slice."""
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH8).plan("twophase_h", 3)
+    replayed = ExecutionPlan.from_json(plan.to_json())
+    a = build_apply(MODS, plan)(PARAMS["trunk"], X)
+    b = build_apply(MODS, replayed)(PARAMS["trunk"], X)
+    assert bool(jnp.array_equal(a, b))
+    # per-device projection: same engine on one device's slice of the batch
+    sub = replayed.per_device()
+    assert sub.mesh is None and sub.batch == 1
+    c = build_apply(MODS, sub)(PARAMS["trunk"], X[:1])
+    assert jnp.allclose(c, a[:1], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serve: sharded decode-slot pool == unsharded decode (2-way)
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+def test_sharded_serve_matches_unsharded():
+    from repro.configs import get_reduced
+    from repro.models.lm import model as LM
+    from repro.serve import make_requests, serve
+    cfg = get_reduced("qwen1_5_4b")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = make_requests(4, cfg.vocab, seed=0, prompt_len=16,
+                         max_new_tokens=8)
+    ref_report, _ = serve(params, cfg, reqs, n_slots=4)
+    rep, plan = serve(params, cfg, reqs, n_slots=4,
+                      mesh=MeshSpec.parse("data=2"))
+    assert plan.mesh is not None and plan.get("slots_per_device") == 2
+    for r in reqs:
+        assert rep.tokens(r.rid) == ref_report.tokens(r.rid)
+
+
+@needs_devices
+def test_sharded_pool_caches_land_on_data_axis():
+    from repro.configs import get_reduced
+    from repro.exec.planner import Planner as Pl
+    from repro.serve.cache_pool import CachePool
+    cfg = get_reduced("qwen1_5_4b")
+    plan = Pl.for_serve(cfg, 32, n_slots=4, mesh=MeshSpec.parse("data=2"))
+    pool = CachePool(cfg, plan)
+    sharded = [l for l in jax.tree.leaves(pool.caches)
+               if "data" in str(getattr(l, "sharding").spec)]
+    assert sharded, "no pool cache leaf sharded over the data axis"
