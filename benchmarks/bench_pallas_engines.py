@@ -1,0 +1,76 @@
+"""Lax vs Pallas engines at VGG-16 row granularities.
+
+For each conv row-block height the planner kernelizes the same OverL plan:
+the row records the per-row-block VMEM bytes the planner priced (the
+number that matters on TPU — every grid step reuses this fixed working
+set) next to the fwd+bwd step time.  On this CPU container the pallas
+times are interpreter times (a correctness/plumbing number, not a perf
+target); the lax row is the reference engine at the same granularity.
+
+Standalone (prints BENCH JSON):
+  PYTHONPATH=src python -m benchmarks.bench_pallas_engines
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.exec import KernelSpec, Planner, build_apply
+from repro.models.cnn.vgg import init_vgg16
+
+H = 32
+BATCH = 2
+BLOCK_HS = (2, 4, 8)
+
+
+def _step(mods, plan, params):
+    apply_fn = build_apply(mods, plan)
+
+    def loss(p, x):
+        return jnp.sum(apply_fn(p, x) ** 2)
+
+    return jax.jit(jax.value_and_grad(loss))
+
+
+def run() -> List[dict]:
+    shape = (H, H, 3)
+    mods, params = init_vgg16(jax.random.PRNGKey(0), shape,
+                              width_mult=0.125, n_classes=4, n_stages=2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, H, H, 3))
+    planner = Planner(mods, shape, BATCH)
+    rows = []
+    base_plan = planner.plan("overlap", 4)
+    us_lax = time_fn(_step(mods, base_plan, params), params["trunk"], x)
+    rows.append({"name": f"pallas_engine/vgg16_h{H}/lax_overlap",
+                 "us_per_call": round(us_lax, 1),
+                 "engine": base_plan.engine, "n_rows": base_plan.n_rows})
+    for bh in BLOCK_HS:
+        spec = KernelSpec(backend="pallas", block_h=bh)
+        plan = planner.kernelize(base_plan, spec)
+        us = time_fn(_step(mods, plan, params), params["trunk"], x)
+        rows.append({
+            "name": f"pallas_engine/vgg16_h{H}/pallas_bh{bh}",
+            "us_per_call": round(us, 1),
+            "engine": plan.engine,
+            "backend": plan.kernel.backend,
+            "block_h": bh,
+            "vmem_row_block_bytes": plan.get("kernel_vmem_bytes", 0),
+            "pallas_layers": plan.get("kernel_layers", 0),
+            "fallback": plan.get("kernel_fallback", ""),
+            "vs_lax_x": round(us / max(us_lax, 1e-9), 2),
+        })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ MODULES = [
     ("table1_checkpointing", "benchmarks.bench_table1"),
     ("fig11_convergence", "benchmarks.bench_convergence"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("pallas_engines", "benchmarks.bench_pallas_engines"),
     ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
     ("serving_continuous_batching", "benchmarks.bench_serving"),
     ("sharding_data_extent", "benchmarks.bench_sharding"),

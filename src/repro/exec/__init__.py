@@ -18,21 +18,25 @@ Typical use::
     apply_fn = build_apply(modules, plan)   # sharded when plan.mesh is set
 """
 
-from repro.exec.plan import ExecutionPlan, MeshSpec, PlanRequest
+from repro.exec.plan import ExecutionPlan, KernelSpec, MeshSpec, PlanRequest
 from repro.exec.planner import (
-    BUDGET_PREFERENCE, CNN_ENGINES, Planner, segment_row_capacity,
+    BUDGET_PREFERENCE, CNN_ENGINES, PALLAS_ALTERNATE, PALLAS_ENGINES,
+    Planner, kernelize_plan, segment_row_capacity,
 )
 from repro.exec.registry import (
     EngineSpec, build_apply, get_engine, list_engines, register_engine,
     register_shard_wrapper,
 )
 
-# importing the module registers the built-in engines + shard wrappers
+# importing the modules registers the built-in engines + shard wrappers
 from repro.exec import engines as _builtin_engines  # noqa: E402,F401
+from repro.exec import pallas_engines as _pallas_engines  # noqa: E402,F401
 
 __all__ = [
-    "ExecutionPlan", "MeshSpec", "PlanRequest", "Planner", "EngineSpec",
+    "ExecutionPlan", "KernelSpec", "MeshSpec", "PlanRequest", "Planner",
+    "EngineSpec",
     "register_engine", "get_engine", "list_engines", "build_apply",
-    "register_shard_wrapper",
-    "CNN_ENGINES", "BUDGET_PREFERENCE", "segment_row_capacity",
+    "register_shard_wrapper", "kernelize_plan",
+    "CNN_ENGINES", "BUDGET_PREFERENCE", "PALLAS_ALTERNATE",
+    "PALLAS_ENGINES", "segment_row_capacity",
 ]

@@ -1,0 +1,224 @@
+"""Pallas-backed row-kernel engines — LR-CNN's row dataflow realised at the
+accelerator level, registered as first-class plan-selectable alternatives
+to the lax reference engines.
+
+The lax engines bound *framework* liveness: rows are slices with custom
+VJPs and the working set is one row's activation chain.  The engines here
+push the same partitioning down one level: rows become Pallas grid steps
+that reuse a fixed VMEM working set (``conv2d_rows``'s dual-block halo
+fetch for CNN trunks; ``swa_attention`` / ``ssd_chunk`` along the sequence
+axis) — the reuse-across-rows idea applied to the scarce on-chip memory
+instead of HBM.  Policy stays on the plan: :class:`~repro.exec.plan.
+KernelSpec` picks backend + tile geometry, and the Planner
+(:func:`repro.exec.planner.kernelize_plan`) prices VMEM per row block and
+falls back to the lax backend when the tiling is infeasible.
+
+Fallback is layered twice:
+
+* plan level — the Planner never emits a pallas spec the kernels cannot
+  execute (VMEM budget, tile divisibility, MXU alignment on real TPUs);
+* layer level — ``overlap_pallas`` runs any conv whose halo precondition
+  :func:`~repro.kernels.conv2d_rows.halo_ok` rejects (and any non-Conv
+  module) through the reference lax path, so one ineligible layer never
+  forfeits the rest of the trunk.
+
+Gradients: the Pallas kernels are forward-only, so every kernel call
+carries a ``jax.custom_vjp`` whose backward pass is the lax reference VJP.
+Loss AND grads therefore stay exact against the lax engines (pinned by
+tests/test_pallas_engines.py), which is what makes these engines drop-in
+under ``jax.value_and_grad`` training and PR 3's shard wrappers: they
+register under ``kind="cnn"`` / ``kind="seq"``, so the per-kind wrappers
+shard them without any engine-code changes.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.exec.plan import ExecutionPlan, KernelSpec
+from repro.exec.registry import register_engine
+from repro.kernels import ref as _ref
+from repro.kernels.conv2d_rows import (
+    conv2d_rows, halo_ok, vmem_bytes as conv_vmem_bytes,
+)
+from repro.kernels.ops import resolve_interpret
+from repro.kernels.ssd_chunk import ssd_scan
+from repro.kernels.swa_attention import swa_attention
+from repro.models.cnn.layers import Conv
+
+
+def plan_kernel(plan: ExecutionPlan, default_backend: str = "pallas"
+                ) -> KernelSpec:
+    """The plan's KernelSpec; a bare plan naming a ``*_pallas`` engine
+    means the default tile geometry on the pallas backend."""
+    return plan.kernel if plan.kernel is not None \
+        else KernelSpec(backend=default_backend)
+
+
+def conv_tiles(modules: Sequence, in_shape: Tuple[int, int, int],
+               spec: KernelSpec, dtype_bytes: int = 4
+               ) -> Iterator[Tuple[object, tuple, tuple, bool,
+                                   Optional[int]]]:
+    """Walk a trunk's shape chain and classify each module for the pallas
+    conv path: yields ``(module, in_shape, out_shape, eligible, vmem)``
+    where ``eligible`` is the layer-level halo precondition at the spec's
+    (clamped) block and ``vmem`` the per-row-block working set of the
+    resulting BlockSpec tiling (``None`` for non-Conv modules).  Shared by
+    the engine (which layers run pallas) and the Planner (what they cost).
+    """
+    shape = tuple(in_shape)
+    for m in modules:
+        out = m.out_shape(shape)
+        if isinstance(m, Conv):
+            h_out, w_out, cout = out
+            eligible = h_out >= 1 and w_out >= 1 \
+                and halo_ok(m.k, m.s, spec.block_h, h_out)
+            bh = max(1, min(spec.block_h, h_out))
+            vmem = conv_vmem_bytes(bh, m.s, shape[1] + 2 * m.p, shape[2],
+                                   w_out, cout, m.k, m.k, dtype_bytes)
+        else:
+            eligible, vmem = False, None
+        yield m, shape, out, eligible, vmem
+        shape = out
+
+
+# ---------------------------------------------------------------------------
+# CNN trunk: conv rows as Pallas grid steps
+# ---------------------------------------------------------------------------
+
+
+def _pallas_conv(m: Conv, block_h: int, interpret: bool):
+    """One conv layer: forward through ``conv2d_rows`` (dual-block halo
+    fetch), backward through the lax reference VJP."""
+
+    def _forward(params, x):
+        y = conv2d_rows(x, params["w"], stride=m.s, padding=m.p,
+                        block_h=block_h, interpret=interpret)
+        if m.bias:
+            y = y + params["b"]
+        return y
+
+    @jax.custom_vjp
+    def conv(params, x):
+        return _forward(params, x)
+
+    def fwd(params, x):
+        return _forward(params, x), (params, x)
+
+    def bwd(res, g):
+        params, x = res
+        _, vjp = jax.vjp(m.apply, params, x)
+        return vjp(g)
+
+    conv.defvjp(fwd, bwd)
+    return conv
+
+
+@register_engine("overlap_pallas", kind="cnn",
+                 doc="OverL rows as Pallas grid steps: conv2d_rows dual-"
+                     "block halo fetch per conv layer, lax path for "
+                     "layers the halo precondition rejects "
+                     "(plan.kernel carries block_h / interpret)")
+def _build_overlap_pallas(modules, plan: ExecutionPlan):
+    if plan.in_shape is None:
+        raise ValueError("overlap_pallas plan needs an in_shape")
+    spec = plan_kernel(plan)
+    interpret = resolve_interpret(spec.interpret)
+    fns = []
+    for m, _, out, eligible, _ in conv_tiles(modules, plan.in_shape, spec,
+                                             plan.dtype_bytes):
+        if spec.backend == "pallas" and eligible:
+            bh = max(1, min(spec.block_h, out[0]))
+            fns.append(_pallas_conv(m, bh, interpret))
+        else:
+            fns.append(m.apply)
+
+    def apply(params, x):
+        for fn, p in zip(fns, params):
+            x = fn(p, x)
+        return x
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# Sequence-axis engines: the window halo and the chunk carry in VMEM
+# ---------------------------------------------------------------------------
+
+
+@register_engine("seq_swa_pallas", kind="seq",
+                 doc="OverL along the sequence at BlockSpec level: flash "
+                     "sliding-window attention, the window IS the halo "
+                     "(plan.kernel carries bq / bk; layout (B, S, H, D) "
+                     "as for seq_swa_overlap)")
+def _build_seq_swa_pallas(modules, plan: ExecutionPlan):
+    window = int(plan.get("window", 0))
+    if window <= 0:
+        raise ValueError("seq_swa_pallas plan needs a 'window' extra")
+    spec = plan_kernel(plan)
+    interpret = resolve_interpret(spec.interpret)
+
+    def _lax_forward(q, k, v):
+        # (B, S, H, D) -> kernel-layout (B, H, S, D) and back
+        out = _ref.swa_attention_ref(q.transpose(0, 2, 1, 3),
+                                     k.transpose(0, 2, 1, 3),
+                                     v.transpose(0, 2, 1, 3), window)
+        return out.transpose(0, 2, 1, 3)
+
+    def _forward(q, k, v):
+        if spec.backend != "pallas":
+            return _lax_forward(q, k, v)
+        out = swa_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), window=window,
+                            bq=spec.bq, bk=spec.bk, interpret=interpret)
+        return out.transpose(0, 2, 1, 3)
+
+    @jax.custom_vjp
+    def apply(q, k, v):
+        return _forward(q, k, v)
+
+    def fwd(q, k, v):
+        return _forward(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(_lax_forward, *res)
+        return vjp(g)
+
+    apply.defvjp(fwd, bwd)
+    return apply
+
+
+@register_engine("seq_ssd_pallas", kind="seq",
+                 doc="2PS along the sequence at BlockSpec level: SSD "
+                     "chunks with the carried state as VMEM-resident "
+                     "boundary cache (plan.kernel carries chunk)")
+def _build_seq_ssd_pallas(modules, plan: ExecutionPlan):
+    spec = plan_kernel(plan)
+    interpret = resolve_interpret(spec.interpret)
+
+    def _lax_forward(x, B, C, a, dt):
+        return _ref.ssd_scan_ref(x, B, C, a, dt)[0]
+
+    def _forward(x, B, C, a, dt):
+        if spec.backend != "pallas":
+            return _lax_forward(x, B, C, a, dt)
+        return ssd_scan(x, B, C, a, dt, chunk=spec.chunk,
+                        interpret=interpret)
+
+    @jax.custom_vjp
+    def apply(x, B, C, a, dt):
+        return _forward(x, B, C, a, dt)
+
+    def fwd(x, B, C, a, dt):
+        return _forward(x, B, C, a, dt), (x, B, C, a, dt)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(_lax_forward, *res)
+        return vjp(g)
+
+    apply.defvjp(fwd, bwd)
+    return apply

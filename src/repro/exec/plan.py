@@ -138,6 +138,47 @@ def batch_shards(mesh: Optional[MeshSpec], batch: int) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Serializable kernel-execution policy — the accelerator half of a
+    plan.  ``backend`` picks which mechanism realises the row dataflow:
+    ``"lax"`` (the reference engines; rows are framework-level slices) or
+    ``"pallas"`` (rows become Pallas grid steps reusing a fixed VMEM
+    working set — :mod:`repro.exec.pallas_engines`).  The tile fields are
+    the per-kernel row granularities (``block_h`` for ``conv2d_rows``,
+    ``bq``/``bk`` for ``swa_attention``, ``chunk`` for ``ssd_chunk``).
+
+    ``interpret`` is tri-state: ``None`` defers to the environment
+    (``REPRO_PALLAS_INTERPRET`` override, else interpret everywhere but a
+    real TPU — see :func:`repro.kernels.ops.default_interpret`), so the
+    same logged plan runs the Pallas interpreter on CPU CI and the
+    compiled lowering on TPU.
+    """
+
+    backend: str = "lax"              # "lax" | "pallas"
+    block_h: int = 8                  # conv2d_rows output-row block height
+    bq: int = 128                     # swa_attention query block
+    bk: int = 128                     # swa_attention kv block
+    chunk: int = 128                  # ssd_chunk sequence chunk
+    interpret: Optional[bool] = None  # None = env/platform default
+
+    def __post_init__(self):
+        if self.backend not in ("lax", "pallas"):
+            raise ValueError(f"unknown kernel backend {self.backend!r}; "
+                             f"expected 'lax' or 'pallas'")
+        for f in ("block_h", "bq", "bk", "chunk"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"KernelSpec.{f} must be >= 1, got "
+                                 f"{getattr(self, f)}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanRequest:
     """What a config *asks for* — resolved to an :class:`ExecutionPlan` by
     the :class:`~repro.exec.planner.Planner` at launch time.
@@ -151,6 +192,8 @@ class PlanRequest:
     budget_gb: float = 0.0            # activation budget M (0 = none)
     n_segments: Optional[int] = None  # hybrid/ckp segment count (None = sqrt L)
     mesh: str = ""                    # "data=8[,model=2]"; "" = single-device
+    kernel: str = ""                  # "pallas" = kernel-backed engines;
+    #                                   "lax"/"" = reference engines
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +225,7 @@ class ExecutionPlan:
     budget: int = 0          # bytes, global; 0 = unconstrained
     feasible: bool = True
     mesh: Optional[MeshSpec] = None
+    kernel: Optional[KernelSpec] = None
     extras: Tuple[Tuple[str, Any], ...] = ()
 
     def __post_init__(self):
@@ -193,6 +237,9 @@ class ExecutionPlan:
             object.__setattr__(self, "in_shape", tuple(self.in_shape))
         if isinstance(self.mesh, dict):
             object.__setattr__(self, "mesh", MeshSpec.from_dict(self.mesh))
+        if isinstance(self.kernel, dict):
+            object.__setattr__(self, "kernel",
+                               KernelSpec.from_dict(self.kernel))
         if not self.est_bytes_per_device and self.est_bytes:
             object.__setattr__(self, "est_bytes_per_device",
                                self.est_bytes // self.data_shards)
@@ -244,11 +291,13 @@ class ExecutionPlan:
     def explicit(cls, engine: str, n_rows: int = 1,
                  in_shape: Optional[Tuple[int, int, int]] = None,
                  n_segments: Optional[int] = None,
-                 mesh: Optional[MeshSpec] = None, **extras) -> "ExecutionPlan":
+                 mesh: Optional[MeshSpec] = None,
+                 kernel: Optional[KernelSpec] = None,
+                 **extras) -> "ExecutionPlan":
         """An unestimated plan pinning (engine, N) — the escape hatch for
         callers that already know what they want (benchmarks, tests)."""
         return cls(engine=engine, n_rows=n_rows, in_shape=in_shape,
-                   n_segments=n_segments, mesh=mesh,
+                   n_segments=n_segments, mesh=mesh, kernel=kernel,
                    extras=tuple(extras.items()))
 
     # ------------------------------------------------------------------
@@ -266,6 +315,8 @@ class ExecutionPlan:
         if self.budget:
             bits.append(f"budget={self.budget / 2**20:.1f}MiB")
             bits.append(f"feasible={self.feasible}")
+        if self.kernel is not None:
+            bits.append(f"kernel={self.kernel.backend}")
         for k, v in self.extras:
             bits.append(f"{k}={v}")
         return "ExecutionPlan(" + " ".join(bits) + ")"
@@ -276,6 +327,8 @@ class ExecutionPlan:
         d["segments"] = [list(s) for s in self.segments]
         d["extras"] = {k: v for k, v in self.extras}
         d["mesh"] = self.mesh.to_dict() if self.mesh is not None else None
+        d["kernel"] = self.kernel.to_dict() if self.kernel is not None \
+            else None
         return d
 
     @classmethod
@@ -287,6 +340,8 @@ class ExecutionPlan:
         d["extras"] = tuple(sorted(d.get("extras", {}).items()))
         if d.get("mesh") is not None:
             d["mesh"] = MeshSpec.from_dict(d["mesh"])
+        if d.get("kernel") is not None:
+            d["kernel"] = KernelSpec.from_dict(d["kernel"])
         return cls(**d)
 
     def to_json(self) -> str:

@@ -34,7 +34,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import rowplan as _rp
 from repro.exec.plan import (
-    ExecutionPlan, MeshSpec, PlanRequest, batch_shards,
+    ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, batch_shards,
 )
 
 CNN_ENGINES = ("base", "ckp", "overlap", "twophase", "overlap_h",
@@ -45,6 +45,15 @@ BUDGET_PREFERENCE = ("base", "twophase", "overlap", "twophase_h",
 #: per-segment strategy of each checkpointed engine
 INNER_STRATEGY = {"ckp": "column", "overlap_h": "overlap",
                   "twophase_h": "twophase"}
+
+#: lax engine -> its pallas-backed alternate with the SAME call signature
+#: (base and overlap both map to overlap_pallas: the kernel's row tiling is
+#: internal, so its full-tensor apply is a drop-in for either)
+PALLAS_ALTERNATE = {"base": "overlap_pallas", "overlap": "overlap_pallas",
+                    "seq_swa_overlap": "seq_swa_pallas"}
+PALLAS_ENGINES = ("overlap_pallas", "seq_swa_pallas", "seq_ssd_pallas")
+#: per-row-block working-set ceiling (one TPU core's VMEM)
+PALLAS_VMEM_LIMIT = 16 * 2**20
 
 
 def derive_segments(modules: Sequence, h0: int, inner: str, n_rows: int,
@@ -60,6 +69,125 @@ def derive_segments(modules: Sequence, h0: int, inner: str, n_rows: int,
     caps = max_rows_per_segment(modules, h0, cuts, inner)
     return tuple((a, b, max(1, min(n_rows, cap)))
                  for (a, b), cap in zip(cuts, caps))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-execution policy: lax <-> pallas engine selection under VMEM
+# ---------------------------------------------------------------------------
+
+
+def _pallas_infeasible(target: str, plan: ExecutionPlan, spec: KernelSpec,
+                       modules: Optional[Sequence],
+                       vmem_limit: int) -> Tuple[str, dict]:
+    """``(reason, pricing)``: why ``target`` cannot run ``spec``'s tiling
+    ("" when it can) plus the VMEM pricing extras to record on the plan.
+
+    CNN pricing walks the trunk's shape chain (``conv_tiles``) once: a
+    conv layer counts as pallas-eligible when the halo precondition holds
+    and its per-row-block working set fits ``vmem_limit``; MXU alignment
+    (``good_tiling``) is additionally required when the spec resolves to a
+    compiled (non-interpret) run — on the interpreter there is no MXU, so
+    alignment stays advisory and CPU CI exercises the kernels regardless
+    of toy channel counts.  Sequence pricing checks tile divisibility
+    against the plan's ``seq`` extra (required: the kernels *assert*
+    divisibility at call time, so an unvalidated spec must fall back
+    rather than crash inside jit) and the swa working set via the plan's
+    ``head_dim``.
+    """
+    from repro.kernels.ops import resolve_interpret
+
+    if target == "overlap_pallas":
+        if plan.in_shape is None:
+            return "plan has no in_shape to tile over", {}
+        if modules is None:
+            return "module list unavailable for VMEM pricing", {}
+        from repro.exec.pallas_engines import conv_tiles
+        from repro.kernels.conv2d_rows import good_tiling
+        need_aligned = not resolve_interpret(spec.interpret)
+        n_ok, n_aligned, worst = 0, 0, 0
+        for m, shape, out, eligible, vmem in conv_tiles(
+                modules, plan.in_shape, spec, plan.dtype_bytes):
+            if not eligible:
+                continue
+            n_ok += 1
+            worst = max(worst, vmem)
+            n_aligned += good_tiling(shape[2], out[2])
+        pricing = {"kernel_vmem_bytes": worst, "kernel_layers": n_ok}
+        if not n_ok:
+            return (f"no conv layer admits the halo precondition at "
+                    f"block_h={spec.block_h}"), {}
+        if worst > vmem_limit:
+            return (f"row-block VMEM {worst} exceeds the "
+                    f"{vmem_limit}-byte working-set limit"), {}
+        if need_aligned and not n_aligned:
+            return ("no MXU-aligned conv layer (good_tiling) for a "
+                    "compiled run"), {}
+        return "", pricing
+    seq = int(plan.get("seq", 0))
+    if not seq:
+        return (f"plan has no 'seq' extra to validate {target!r} tiling "
+                f"against"), {}
+    if target == "seq_swa_pallas":
+        bq, bk = min(spec.bq, seq), min(spec.bk, seq)
+        if seq % bq or seq % bk or bk > bq or bq % bk:
+            return (f"swa tiling bq={bq} bk={bk} does not tile seq={seq} "
+                    f"(need seq % bq == seq % bk == bq % bk == 0, "
+                    f"bk <= bq)"), {}
+        d = int(plan.get("head_dim", 0))
+        if d:
+            from repro.kernels.swa_attention import vmem_bytes as swa_vmem
+            if swa_vmem(bq, bk, d) > vmem_limit:
+                return (f"swa row-block VMEM {swa_vmem(bq, bk, d)} "
+                        f"exceeds the {vmem_limit}-byte working-set "
+                        f"limit"), {}
+            return "", {"kernel_vmem_bytes": swa_vmem(bq, bk, d)}
+        return "", {}
+    if target == "seq_ssd_pallas":
+        if seq % min(spec.chunk, seq):
+            return (f"ssd chunk={min(spec.chunk, seq)} does not divide "
+                    f"seq={seq}"), {}
+        return "", {}
+    return f"engine {plan.engine!r} has no pallas alternate", {}
+
+
+def kernelize_plan(plan: ExecutionPlan, spec, modules: Optional[Sequence]
+                   = None, vmem_limit: int = PALLAS_VMEM_LIMIT
+                   ) -> ExecutionPlan:
+    """Apply a kernel-execution policy to a resolved plan.
+
+    ``spec`` may be a :class:`KernelSpec` or a bare backend string.  With
+    the lax backend the spec is simply attached.  With the pallas backend
+    the plan's engine is swapped for its kernel-backed alternate
+    (``PALLAS_ALTERNATE``) when the tiling is feasible; otherwise the plan
+    keeps its lax engine (or, for an engine that is already pallas, flips
+    the spec's backend to lax — every pallas engine carries the reference
+    path internally) and records why under the ``kernel_fallback`` extra.
+    Estimates are untouched: kernel tiling changes *where* a row's working
+    set lives (VMEM vs HBM), not the Eq. 7 activation accounting.
+    """
+    if isinstance(spec, str):
+        spec = KernelSpec(backend=spec)
+    if spec.backend != "pallas":
+        return dataclasses_replace(plan, kernel=spec)
+    target = PALLAS_ALTERNATE.get(plan.engine, plan.engine)
+    if target not in PALLAS_ENGINES:
+        return _kernel_fallback(
+            plan, spec, f"engine {plan.engine!r} has no pallas alternate")
+    reason, pricing = _pallas_infeasible(target, plan, spec, modules,
+                                         vmem_limit)
+    if reason:
+        return _kernel_fallback(plan, spec, reason)
+    out = dataclasses_replace(plan, engine=target, kernel=spec)
+    if pricing:
+        out = out.with_extras(**pricing)
+    return out
+
+
+def _kernel_fallback(plan: ExecutionPlan, spec: KernelSpec,
+                     reason: str) -> ExecutionPlan:
+    lax_spec = dataclasses_replace(spec, backend="lax")
+    return dataclasses_replace(
+        plan.with_extras(kernel_fallback=reason), kernel=lax_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -295,10 +423,18 @@ class Planner(_ServePlannerMixin):
             budget=budget, feasible=(budget == 0 or dev_est < dev_budget),
             mesh=self.mesh, extras=tuple(extras.items()))
 
+    def kernelize(self, plan: ExecutionPlan, spec,
+                  vmem_limit: int = PALLAS_VMEM_LIMIT) -> ExecutionPlan:
+        """Apply a kernel backend to a plan, priced against this planner's
+        module list — see :func:`kernelize_plan`."""
+        return kernelize_plan(plan, spec, modules=self.modules,
+                              vmem_limit=vmem_limit)
+
     def resolve(self, request: PlanRequest) -> ExecutionPlan:
         """Turn a config-level :class:`PlanRequest` into a plan.  A
         ``request.mesh`` string ("data=8[,model=2]") overrides the
-        planner's own mesh."""
+        planner's own mesh; ``request.kernel`` ("pallas"/"lax") applies
+        the kernel-backend policy to whatever plan resolves."""
         if request.mesh:
             mesh = MeshSpec.parse(request.mesh)
             if mesh != self.mesh:
@@ -306,6 +442,12 @@ class Planner(_ServePlannerMixin):
                                self.dtype_bytes, self.xi, self.n_max,
                                mesh=mesh).resolve(
                                    dataclasses_replace(request, mesh=""))
+        plan = self._resolve(request)
+        if request.kernel:
+            plan = self.kernelize(plan, request.kernel)
+        return plan
+
+    def _resolve(self, request: PlanRequest) -> ExecutionPlan:
         budget = int(request.budget_gb * 2**30)
         if request.engine and request.n_rows:
             return self.plan(request.engine, request.n_rows,
@@ -418,7 +560,7 @@ class Planner(_ServePlannerMixin):
                        budget: int, d_ff: int = 0,
                        engine: str = "seq_chunked", window: int = 0,
                        axis: int = 1, dtype_bytes: int = 4,
-                       n_max: int = 64,
+                       n_max: int = 64, head_dim: int = 0,
                        mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
         """Smallest chunk count (dividing ``seq_len``) that fits ``budget``
         (per-device under a mesh); infeasible plan at the largest divisor
@@ -429,6 +571,8 @@ class Planner(_ServePlannerMixin):
         extras = {"axis": axis, "seq": seq_len, "d_model": d_model}
         if window:
             extras["window"] = window
+        if head_dim:  # lets kernelize_plan price the swa VMEM working set
+            extras["head_dim"] = head_dim
         best = None
         for n in divisors:
             est = cls.seq_estimate(seq_len, d_model, batch // shards, n,
@@ -458,12 +602,13 @@ class Planner(_ServePlannerMixin):
             engine, window = "seq_swa_overlap", cfg.sliding_window
         else:
             engine, window = "seq_chunked", 0
+        head_dim = cfg.head_dim if window else 0
         dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
         if budget:
             return cls.for_budget_seq(seq_len, cfg.d_model, batch, budget,
                                       d_ff=cfg.d_ff, engine=engine,
                                       window=window, dtype_bytes=dtype_bytes,
-                                      mesh=mesh)
+                                      head_dim=head_dim, mesh=mesh)
         shards = cls._seq_shards(mesh, batch)
         n = max(1, cfg.row_chunks)
         est = cls.seq_estimate(seq_len, cfg.d_model, batch // shards, n,
@@ -471,6 +616,8 @@ class Planner(_ServePlannerMixin):
         extras = {"axis": 1, "seq": seq_len, "d_model": cfg.d_model}
         if window:
             extras["window"] = window
+        if head_dim:
+            extras["head_dim"] = head_dim
         return ExecutionPlan(engine=engine, n_rows=n, in_shape=None,
                              batch=batch, dtype_bytes=dtype_bytes,
                              est_bytes=est * shards,

@@ -57,6 +57,18 @@ def _conv_kernel(x0_ref, x1_ref, w_ref, o_ref, *, kh, kw, stride, block_h,
     o_ref[0] = acc.astype(o_ref.dtype)
 
 
+def halo_ok(k: int, stride: int, block_h: int,
+            h_out: int | None = None) -> bool:
+    """The dual-block fetch precondition: the receptive-field halo
+    ``k - stride`` must fit inside one input row block, i.e.
+    ``(k - stride) <= block_h * stride``.  Pass ``h_out`` to apply the
+    wrapper's block clamp (``block_h = min(block_h, H_out)``) first —
+    that is the block the kernel actually launches with."""
+    if h_out is not None:
+        block_h = min(block_h, h_out)
+    return (k - stride) <= block_h * stride
+
+
 def conv2d_rows(x, w, *, stride: int = 1, padding: int = 0,
                 block_h: int = 8, interpret: bool = True):
     """NHWC x HWIO -> NHWC convolution with row-block VMEM tiling.
@@ -80,7 +92,7 @@ def conv2d_rows(x, w, *, stride: int = 1, padding: int = 0,
     if need_h > H:
         x = jnp.pad(x, ((0, 0), (0, need_h - H), (0, 0), (0, 0)))
     halo = kh - stride
-    assert halo <= in_block_h, (
+    assert halo_ok(kh, stride, block_h), (
         f"halo {halo} exceeds row block {in_block_h}; increase block_h")
     pad_out = n_blocks * block_h - H_out
 

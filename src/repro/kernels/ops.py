@@ -1,14 +1,18 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On this CPU container the kernels execute with ``interpret=True`` (the
-Pallas interpreter runs the kernel body in Python) — the TPU lowering path
-is identical modulo the flag.  ``INTERPRET`` flips globally for a real TPU
-deployment.
+Interpret-mode policy is plan-carried, not a module constant: engines pass
+``KernelSpec.interpret`` down explicitly, and standalone callers (tests,
+benchmarks) leave ``interpret=None`` to get the environment default —
+``REPRO_PALLAS_INTERPRET=0|1`` when set, else the Pallas interpreter on
+every backend except a real TPU.  CPU CI and TPU runs therefore share one
+code path; the flag is the only difference.
 """
 
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 
@@ -16,20 +20,51 @@ from repro.kernels.conv2d_rows import conv2d_rows as _conv2d_rows
 from repro.kernels.ssd_chunk import ssd_scan as _ssd
 from repro.kernels.swa_attention import swa_attention as _swa
 
-INTERPRET = True  # set False on real TPU
+
+def default_interpret() -> bool:
+    """Environment default for ``pallas_call(interpret=...)``:
+    ``REPRO_PALLAS_INTERPRET`` (0/1) when set, else interpret on anything
+    that is not a TPU."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "")
+    return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "block_h"))
-def conv2d(x, w, stride: int = 1, padding: int = 0, block_h: int = 8):
+def resolve_interpret(flag: Optional[bool] = None) -> bool:
+    """Tri-state ``KernelSpec.interpret`` -> concrete pallas_call flag."""
+    return default_interpret() if flag is None else bool(flag)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "block_h",
+                                             "interpret"))
+def _conv2d(x, w, stride, padding, block_h, interpret):
     return _conv2d_rows(x, w, stride=stride, padding=padding,
-                        block_h=block_h, interpret=INTERPRET)
+                        block_h=block_h, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "bq", "bk"))
-def swa_attention(q, k, v, window: int, bq: int = 128, bk: int = 128):
-    return _swa(q, k, v, window=window, bq=bq, bk=bk, interpret=INTERPRET)
+def conv2d(x, w, stride: int = 1, padding: int = 0, block_h: int = 8,
+           interpret: Optional[bool] = None):
+    return _conv2d(x, w, stride, padding, block_h,
+                   resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd_scan(x, B, C, a, dt, chunk: int = 128):
-    return _ssd(x, B, C, a, dt, chunk=chunk, interpret=INTERPRET)
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def _swa_jit(q, k, v, window, bq, bk, interpret):
+    return _swa(q, k, v, window=window, bq=bq, bk=bk, interpret=interpret)
+
+
+def swa_attention(q, k, v, window: int, bq: int = 128, bk: int = 128,
+                  interpret: Optional[bool] = None):
+    return _swa_jit(q, k, v, window, bq, bk, resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_jit(x, B, C, a, dt, chunk, interpret):
+    return _ssd(x, B, C, a, dt, chunk=chunk, interpret=interpret)
+
+
+def ssd_scan(x, B, C, a, dt, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    return _ssd_jit(x, B, C, a, dt, chunk, resolve_interpret(interpret))

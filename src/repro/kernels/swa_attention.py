@@ -68,6 +68,13 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                     jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def vmem_bytes(bq: int, bk: int, d: int) -> int:
+    """Working-set estimate for one grid step: q block + kv blocks +
+    acc scratch + scores, plus the (m, l) online-softmax rows — all f32
+    (matches the VMEM note in the module docstring)."""
+    return 4 * (bq * d + 2 * bk * d + bq * d + bq * bk + 2 * bq)
+
+
 def swa_attention(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
                   interpret: bool = True):
     """q/k/v: (B, H, S, D) -> (B, H, S, D); causal sliding-window."""

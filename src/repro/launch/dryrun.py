@@ -21,14 +21,14 @@ import jax
 from repro.analysis.costmodel import analyze as cost_analyze
 from repro.analysis.roofline import analyze
 from repro.configs import get_config, list_configs
-from repro.exec import Planner
+from repro.exec import Planner, kernelize_plan
 from repro.launch.mesh import make_production_mesh, production_mesh_spec
 from repro.launch.steps import SHAPES, build_jitted, shape_applicable
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
             out_dir: str, verbose: bool = True, overrides: dict = None,
-            tag_suffix: str = "") -> dict:
+            tag_suffix: str = "", kernel: str = "lax") -> dict:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -44,6 +44,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
     # any host
     plan = Planner.for_model(cfg, shape.batch, shape.seq,
                              mesh=production_mesh_spec(multi_pod=multi_pod))
+    if kernel:
+        # the chosen KernelSpec (or its lax fallback + reason) is part of
+        # the artefact: a dry-run record fully pins kernel policy too
+        plan = kernelize_plan(plan, kernel)
     rec["exec_plan"] = plan.to_dict()
     rec["exec_plan_per_device"] = plan.per_device().to_dict()
     ok, why = shape_applicable(cfg, shape)
@@ -126,6 +130,10 @@ def main():
                     help="config overrides, e.g. remat=block_rows "
                          "param_dtype=bfloat16 capacity_factor=1.0")
     ap.add_argument("--tag", default="", help="output filename suffix")
+    ap.add_argument("--kernel", default="lax", choices=["lax", "pallas"],
+                    help="kernel backend recorded on the exec plan "
+                         "(pallas swaps in the kernel-backed engine when "
+                         "the tiling is feasible)")
     args = ap.parse_args()
     overrides = _parse_overrides(args.set)
 
@@ -140,7 +148,8 @@ def main():
             for mp in meshes:
                 t0 = time.time()
                 rec = run_one(arch, sh, mp, args.fsdp, args.out,
-                              overrides=overrides, tag_suffix=args.tag)
+                              overrides=overrides, tag_suffix=args.tag,
+                              kernel=args.kernel)
                 dt = time.time() - t0
                 print(f"{rec['status']:8s} {arch:24s} {sh:12s} "
                       f"{rec['mesh']:8s} {dt:7.1f}s "

@@ -16,6 +16,17 @@ Two modes:
             extent), the resolved plan carries the mesh, and execution
             shards the batch across it — CNN via the registry's shard
             wrapper, LM via in_shardings from launch.steps.
+* pallas:  add --kernel pallas: the resolved plan is kernelized — its
+            engine swapped for the Pallas-backed alternate (rows as VMEM
+            grid steps; interpret mode off-TPU, REPRO_PALLAS_INTERPRET
+            overrides) with automatic lax fallback when the tiling is
+            infeasible.  Composes with --mesh: kernel-backed engines
+            inherit their kind's shard wrapper.  The swap takes effect
+            where registry engines execute — the CNN path (build_apply
+            runs the kernelized trunk); on the LM path the kernelized
+            plan (selection or fallback reason) is recorded and printed,
+            but the jitted LM step still executes cfg-level remat, like
+            the plan's engine name there generally.
 
 Checkpoints + metrics land in --out.
 """
@@ -62,6 +73,13 @@ def train_lm(args):
         plan = Planner.for_model(cfg, args.batch, args.seq,
                                  budget=int(args.budget_gb * 2**30),
                                  mesh=mesh_spec)
+        if args.kernel:
+            from repro.exec import kernelize_plan
+            plan = kernelize_plan(plan, args.kernel)
+            # recorded policy only: the jitted LM step executes cfg-level
+            # remat, not registry engines (see module docstring)
+            print("kernel policy recorded on plan; LM step runs cfg-level "
+                  "remat")
         print("plan:", plan.describe())
         # row_chunks only takes effect under a rows-remat policy
         remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat,
@@ -164,6 +182,8 @@ def train_cnn(args):
         req = dataclasses.replace(req, engine=args.strategy)
     if args.rows:
         req = dataclasses.replace(req, n_rows=args.rows)
+    if args.kernel:
+        req = dataclasses.replace(req, kernel=args.kernel)
     # the paper's ξ: params + grads + optimizer state live beside activations
     xi = 3 * sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params))
     plan = Planner(mods, shape, batch, xi=xi, mesh=mesh_spec).resolve(req)
@@ -233,6 +253,13 @@ def main():
                     help="device mesh spec, e.g. data=8 or data=4,model=2: "
                          "batch and budget divide over the data axis and "
                          "the resolved plan is sharded")
+    ap.add_argument("--kernel", default="", choices=["", "lax", "pallas"],
+                    help="kernel backend policy: 'pallas' swaps the "
+                         "resolved engine for its Pallas-backed alternate "
+                         "(rows as VMEM grid steps) when the tiling is "
+                         "feasible, with automatic lax fallback otherwise; "
+                         "executes on the CNN path, recorded-only on the "
+                         "LM path (needs --budget-gb there)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")

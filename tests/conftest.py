@@ -7,5 +7,65 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Shared kernel case tables — ONE source of truth for the kernel-level
+# (tests/test_kernels.py, vs the ref.py oracles) and engine-level
+# (tests/test_pallas_engines.py, vs the lax reference engines) parity tiers.
+# ---------------------------------------------------------------------------
+
+KERNEL_CONV_CASES = [
+    # (H, W, Cin, Cout, k, s, p, block_h)
+    (16, 16, 8, 16, 3, 1, 1, 4),
+    (17, 13, 4, 8, 3, 1, 0, 8),
+    (32, 32, 8, 8, 5, 1, 2, 8),
+    (16, 16, 8, 16, 3, 2, 1, 4),
+    (24, 24, 4, 8, 7, 2, 3, 4),
+    (14, 14, 16, 32, 1, 1, 0, 8),
+    (9, 9, 3, 4, 3, 1, 1, 2),   # odd sizes
+    (64, 8, 4, 4, 3, 1, 1, 16),  # tall skinny
+]
+
+KERNEL_SWA_CASES = [
+    # (S, D, window, bq, bk)
+    (256, 64, 64, 64, 32),
+    (256, 64, 0, 128, 64),     # full causal
+    (512, 32, 128, 128, 128),
+    (256, 64, 100, 64, 32),    # window not block-aligned
+    (128, 128, 32, 32, 32),
+    (128, 64, 200, 64, 64),    # window > S
+]
+
+KERNEL_SSD_CASES = [
+    # (Bt, S, H, P, N, chunk)
+    (2, 64, 4, 16, 8, 16),
+    (1, 128, 2, 8, 4, 32),
+    (2, 32, 4, 16, 8, 32),   # single chunk
+    (1, 64, 8, 8, 16, 8),    # many heads, tiny chunk
+]
+
+
+def _case_ids(cases):
+    return ["x".join(str(v) for v in c) for c in cases]
+
+
+@pytest.fixture(params=KERNEL_CONV_CASES, ids=_case_ids(KERNEL_CONV_CASES))
+def conv_case(request):
+    """(H, W, Cin, Cout, k, s, p, block_h)"""
+    return request.param
+
+
+@pytest.fixture(params=KERNEL_SWA_CASES, ids=_case_ids(KERNEL_SWA_CASES))
+def swa_case(request):
+    """(S, D, window, bq, bk)"""
+    return request.param
+
+
+@pytest.fixture(params=KERNEL_SSD_CASES, ids=_case_ids(KERNEL_SSD_CASES))
+def ssd_case(request):
+    """(Bt, S, H, P, N, chunk)"""
+    return request.param

@@ -1,32 +1,24 @@
 """Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
-(interpret=True executes the kernel body on CPU)."""
+(interpret=True executes the kernel body on CPU).
+
+The case tables live in tests/conftest.py (``conv_case`` / ``swa_case`` /
+``ssd_case`` fixtures) and are shared with the engine-level parity tier in
+tests/test_pallas_engines.py, so kernel- and engine-level coverage can
+never drift apart."""
 
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.conv2d_rows import good_tiling, vmem_bytes
+from repro.kernels.conv2d_rows import good_tiling, halo_ok, vmem_bytes
 
 KEY = jax.random.PRNGKey(0)
 
-CONV_CASES = [
-    # (H, W, Cin, Cout, k, s, p, block_h)
-    (16, 16, 8, 16, 3, 1, 1, 4),
-    (17, 13, 4, 8, 3, 1, 0, 8),
-    (32, 32, 8, 8, 5, 1, 2, 8),
-    (16, 16, 8, 16, 3, 2, 1, 4),
-    (24, 24, 4, 8, 7, 2, 3, 4),
-    (14, 14, 16, 32, 1, 1, 0, 8),
-    (9, 9, 3, 4, 3, 1, 1, 2),   # odd sizes
-    (64, 8, 4, 4, 3, 1, 1, 16),  # tall skinny
-]
 
-
-@pytest.mark.parametrize("case", CONV_CASES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_conv2d_rows_allclose(case, dtype):
-    H, W, Cin, Cout, k, s, p, bh = case
+def test_conv2d_rows_allclose(conv_case, dtype):
+    H, W, Cin, Cout, k, s, p, bh = conv_case
     x = jax.random.normal(KEY, (2, H, W, Cin)).astype(dtype)
     w = (jax.random.normal(jax.random.PRNGKey(1), (k, k, Cin, Cout))
          * 0.1).astype(dtype)
@@ -39,21 +31,9 @@ def test_conv2d_rows_allclose(case, dtype):
         jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)).max())
 
 
-SWA_CASES = [
-    # (S, D, window, bq, bk)
-    (256, 64, 64, 64, 32),
-    (256, 64, 0, 128, 64),     # full causal
-    (512, 32, 128, 128, 128),
-    (256, 64, 100, 64, 32),    # window not block-aligned
-    (128, 128, 32, 32, 32),
-    (128, 64, 200, 64, 64),    # window > S
-]
-
-
-@pytest.mark.parametrize("case", SWA_CASES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_swa_attention_allclose(case, dtype):
-    S, D, window, bq, bk = case
+def test_swa_attention_allclose(swa_case, dtype):
+    S, D, window, bq, bk = swa_case
     q = jax.random.normal(KEY, (2, 2, S, D)).astype(dtype)
     k = jax.random.normal(jax.random.PRNGKey(2), (2, 2, S, D)).astype(dtype)
     v = jax.random.normal(jax.random.PRNGKey(3), (2, 2, S, D)).astype(dtype)
@@ -64,18 +44,8 @@ def test_swa_attention_allclose(case, dtype):
                         atol=tol, rtol=tol)
 
 
-SSD_CASES = [
-    # (Bt, S, H, P, N, chunk)
-    (2, 64, 4, 16, 8, 16),
-    (1, 128, 2, 8, 4, 32),
-    (2, 32, 4, 16, 8, 32),   # single chunk
-    (1, 64, 8, 8, 16, 8),    # many heads, tiny chunk
-]
-
-
-@pytest.mark.parametrize("case", SSD_CASES)
-def test_ssd_scan_allclose(case):
-    Bt, S, H, P, N, chunk = case
+def test_ssd_scan_allclose(ssd_case):
+    Bt, S, H, P, N, chunk = ssd_case
     ks = jax.random.split(KEY, 5)
     x = jax.random.normal(ks[0], (Bt, S, H, P)) * 0.5
     B = jax.random.normal(ks[1], (Bt, S, N)) * 0.5
@@ -104,3 +74,15 @@ def test_vmem_budget():
 def test_mxu_alignment_helper():
     assert good_tiling(64, 128)
     assert not good_tiling(3, 64)
+
+
+def test_halo_precondition_helper():
+    # 3x3 stride-1 conv: halo 2 needs a block of at least 2 rows
+    assert halo_ok(3, 1, 2)
+    assert not halo_ok(3, 1, 1)
+    # the wrapper's block clamp applies first: a tall block on a short
+    # output is really min(block_h, h_out) rows
+    assert halo_ok(3, 1, 16, h_out=8)
+    assert not halo_ok(7, 1, 16, h_out=4)
+    # stride shrinks the halo and widens the input block
+    assert halo_ok(7, 2, 4)
