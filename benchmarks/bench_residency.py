@@ -1,0 +1,94 @@
+"""Boundary-cache residency: peak device bytes and step time across the
+``device`` / ``host`` / ``recompute`` policies at FIXED granularity N on
+the VGG-16 trunk.
+
+The LR-CNN angle: 2PS pins every row's bottom-boundary caches from FP to
+BP (the skewed part of the per-row memory profile).  A ResidencySpec
+moves exactly that term — ``host`` trades it for double-buffered
+``device_put`` round-trips, ``recompute`` for O(N^2) extra row steps —
+while loss and gradients stay exact (pinned by tests/test_residency.py).
+This measures both sides of the trade at the same (engine, N): wall-clock
+per train step (fwd+bwd through the row-program engine) and the peak
+device bytes, analytic (``est_bytes_per_device`` from the residency-aware
+Planner) and compiled (``memory_analysis`` on the lowered step).
+
+On CPU hosts the only memory space IS host memory, so the ``host``
+policy's compiled bytes match ``device`` (the transfer schedule still
+runs; see repro.exec.rowprog) — the analytic column is the
+device-accounting view a TPU/GPU host realises.
+
+Standalone (prints BENCH JSON):
+  PYTHONPATH=src python -m benchmarks.bench_residency
+"""
+
+import json
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core.twophase import max_valid_rows
+from repro.exec import Planner, ResidencySpec, build_apply
+from repro.exec.rowprog import offload_is_noop
+from repro.models.cnn.vgg import init_vgg16
+
+H = 256
+BATCH = 2
+POLICIES = ("device", "host", "recompute")
+
+
+def run() -> List[dict]:
+    shape = (H, H, 3)
+    mods, params = init_vgg16(jax.random.PRNGKey(0), shape,
+                              width_mult=0.125, n_classes=4, n_stages=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, H, H, 3))
+    n = max_valid_rows(mods, H)  # fixed N: isolate the residency effect
+    planner = Planner(mods, shape, BATCH)
+    rows = []
+    est = {}
+    for policy in POLICIES:
+        spec = ResidencySpec(default=policy)
+        plan = planner.plan("twophase", n, residency=spec)
+        apply_fn = build_apply(mods, plan)
+
+        def loss(p, xx):
+            return jnp.sum(apply_fn(p, xx) ** 2)
+
+        step = jax.jit(jax.value_and_grad(loss))
+        us = time_fn(step, params["trunk"], x, iters=3, warmup=1)
+        mem = step.lower(params["trunk"], x).compile().memory_analysis()
+        est[policy] = plan.est_bytes_per_device
+        rows.append({
+            "name": f"residency/vgg_h{H}_n{n}/{policy}",
+            "us_per_call": round(us, 1),
+            "engine": plan.engine,
+            "n_rows": n,
+            "residency": policy,
+            "prefetch_depth": spec.prefetch_depth,
+            "est_bytes_per_device": plan.est_bytes_per_device,
+            "temp_bytes_compiled": int(getattr(mem, "temp_size_in_bytes",
+                                               0)),
+            # on CPU hosts offload cannot leave the default memory space,
+            # so the host row's compiled bytes match device (the analytic
+            # column is what a TPU/GPU host realises)
+            "offload_is_noop": offload_is_noop(),
+        })
+    # the headline: how much of the device-resident peak the offloading
+    # policies shave at the same N
+    for policy in ("host", "recompute"):
+        rows.append({
+            "name": f"residency/vgg_h{H}_n{n}/cut_{policy}",
+            "est_ratio": round(est["device"] / max(1, est[policy]), 3),
+            "saved_bytes": est["device"] - est[policy],
+        })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

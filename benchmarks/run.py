@@ -18,6 +18,7 @@ MODULES = [
     ("fig11_convergence", "benchmarks.bench_convergence"),
     ("kernels", "benchmarks.bench_kernels"),
     ("pallas_engines", "benchmarks.bench_pallas_engines"),
+    ("residency_boundary_caches", "benchmarks.bench_residency"),
     ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
     ("serving_continuous_batching", "benchmarks.bench_serving"),
     ("sharding_data_extent", "benchmarks.bench_sharding"),

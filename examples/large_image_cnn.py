@@ -1,8 +1,10 @@
 """The paper's motivating scenario: high-resolution inputs (climate-model
 imagery at 3600x2400) blow past accelerator memory under column-centric
-training. This example uses the rowplan solver to show the feasibility
-frontier, then actually runs row-centric training steps at a resolution
-where the column-centric plan does not fit the budget.
+training.  This example shows the feasibility frontier across resolutions,
+then deliberately requests a budget so tight that NO device-resident plan
+fits — the Planner's ``residencize`` fallback moves the 2PS boundary
+caches to host memory (with double-buffered inter-row prefetch) and the
+training steps run under the residencized plan.
 
   pip install -e . && python examples/large_image_cnn.py
   (or without installing: PYTHONPATH=src python examples/large_image_cnn.py)
@@ -12,45 +14,60 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.rowplan import omega_column, solve_n
-from repro.core.twophase import max_valid_rows
-from repro.exec import ExecutionPlan, build_apply
+from repro.exec import ExecutionPlan, Planner, ResidencySpec, build_apply
 from repro.models.cnn.vgg import head_apply, init_vgg16, vgg16_modules
-from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
 
-BUDGET = 256 * 2**20  # a deliberately tight 256 MiB activation budget
 BATCH = 2
+H = 768
+# 28 MiB sits BELOW the minimum estimate of every device-resident engine
+# at H=768 (best: OverL at ~33 MiB) but above what 2PS needs once its SD
+# caches live on the host — the budget region residency exists for.
+BUDGET = 28 * 2**20
 
 
 def main():
     print(f"activation budget {BUDGET/2**20:.0f} MiB, batch {BATCH}\n")
     print(f"{'H':>6} {'base Ω (MiB)':>14} {'base fits':>10} "
           f"{'2PS N':>6} {'2PS est (MiB)':>14} {'OverL N':>8}")
-    for H in (256, 384, 512, 768, 1024):
+    for h in (256, 384, 512, 768, 1024):
         mods = vgg16_modules(width_mult=0.25, n_stages=3)
-        shape = (H, H, 3)
+        shape = (h, h, 3)
         base = omega_column(mods, shape, BATCH)
         r2 = solve_n(mods, shape, BATCH, BUDGET, "twophase")
         ro = solve_n(mods, shape, BATCH, BUDGET, "overlap")
-        print(f"{H:>6} {base/2**20:>14.1f} {str(base < BUDGET):>10} "
+        print(f"{h:>6} {base/2**20:>14.1f} {str(base < BUDGET):>10} "
               f"{r2.n_rows if r2.feasible else '-':>6} "
               f"{r2.est_bytes/2**20 if r2.feasible else float('nan'):>14.1f} "
               f"{ro.n_rows if ro.feasible else '-':>8}")
 
-    # pick the first resolution where base does NOT fit but 2PS does,
-    # and actually train a few steps there
-    H = 768
     mods = vgg16_modules(width_mult=0.25, n_stages=3)
-    assert omega_column(mods, (H, H, 3), BATCH) > BUDGET  # base would OOM
-    r2 = solve_n(mods, (H, H, 3), BATCH, BUDGET, "twophase")
-    n = max(2, min(r2.n_rows, max_valid_rows(mods, H)))
-    print(f"\ntraining at H={H} with 2PS N={n} "
-          f"(column-centric needs {omega_column(mods, (H, H, 3), BATCH)/2**20:.0f} MiB "
-          f"> budget)")
+    shape = (H, H, 3)
+
+    # device-only solve: every engine is over budget at this resolution
+    device_only = Planner.for_budget(mods, shape, BATCH, BUDGET,
+                                     residency=ResidencySpec())
+    assert not device_only.feasible, "budget should reject device-only plans"
+    print(f"\ndevice-only best at H={H}: {device_only.describe()}")
+
+    # the full solve residencizes: boundary caches move to host memory
+    plan = Planner.for_budget(mods, shape, BATCH, BUDGET)
+    assert plan.feasible and plan.residency is not None
+    print(f"residencized:             {plan.describe()}")
+    print(f"  -> {plan.get('residencized')}")
+
+    # a logged plan replays to the same policy on any host
+    plan = ExecutionPlan.from_json(plan.to_json())
+    assert plan.residency is not None
+
+    print(f"\ntraining at H={H} with {plan.engine} N={plan.n_rows}, "
+          f"SD caches {plan.residency.default}-resident "
+          f"(prefetch_depth={plan.residency.prefetch_depth})")
     key = jax.random.PRNGKey(0)
-    _, params = init_vgg16(key, (H, H, 3), width_mult=0.25, n_classes=4,
+    _, params = init_vgg16(key, shape, width_mult=0.25, n_classes=4,
                            n_stages=3)
-    trunk = build_apply(mods, ExecutionPlan.explicit("twophase", n,
-                                                     (H, H, 3)))
+    trunk = build_apply(mods, plan)
+
+    from repro.optim.adamw import SGDConfig, sgd_init, sgd_update
     opt = sgd_init(params)
     cfg = SGDConfig(lr=0.05)
 

@@ -70,8 +70,13 @@ def max_rows_per_segment(modules: Sequence, h0: int,
 
 
 def make_hybrid_apply(modules: Sequence, h0: int,
-                      segments: Sequence[SegmentSpec]):
-    """Compose per-segment engines into one trunk apply."""
+                      segments: Sequence[SegmentSpec], residency=None):
+    """Compose per-segment engines into one trunk apply.
+
+    ``residency`` (a :class:`~repro.exec.plan.ResidencySpec`) governs the
+    boundary caches of the carry-based (2PS) segments — they are row
+    programs, so each segment's SD caches follow the plan's placement
+    policy; column and overlap segments carry nothing and ignore it."""
     assert segments[0].start == 0 and segments[-1].end == len(modules)
     hs = trunk_heights(modules, h0)
     seg_fns = []
@@ -85,7 +90,8 @@ def make_hybrid_apply(modules: Sequence, h0: int,
         elif spec.strategy == "overlap":
             fn = _ov.make_overlap_apply(sub, h_in, spec.n_rows)
         elif spec.strategy == "twophase":
-            fn = _tp.make_twophase_apply(sub, h_in, spec.n_rows)
+            fn = _tp.make_twophase_apply(sub, h_in, spec.n_rows,
+                                         residency=residency)
         else:
             raise ValueError(spec.strategy)
         seg_fns.append((spec, fn))

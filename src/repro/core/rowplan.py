@@ -61,18 +61,31 @@ def omega_bp(modules, in_shape, batch, n_rows, dtype_bytes: int = 4) -> int:
     return ceil_div(sum(rho[:-1]), n_rows) + rho[-1]
 
 
+def twophase_cache_row_bytes(modules, in_shape, batch, n_rows,
+                             dtype_bytes: int = 4) -> List[int]:
+    """Per-importing-row SD bytes (rows r = 1..N-1): what ONE row's
+    boundary caches pin across all levels.  The residency-aware planner
+    prices host offload / recompute with the *maximum* of these — the
+    transit working set — instead of their sum (what device residency
+    pins FP->BP)."""
+    plan = _tp.module_boundaries(modules, in_shape[0], n_rows)
+    shapes = shape_chain(modules, in_shape)
+    out = []
+    for row in plan.cache_sizes():
+        total = 0
+        for lvl, rows in enumerate(row):  # cache over activation level lvl
+            _, w, c = shapes[lvl]
+            total += batch * rows * w * c * dtype_bytes
+        out.append(total)
+    return out
+
+
 def twophase_cache_bytes(modules, in_shape, batch, n_rows,
                          dtype_bytes: int = 4) -> int:
     """Exact SD volume from the 2PS plan (paper approximates it as
     B(N−1)Σ(k−s)W C)."""
-    plan = _tp.module_boundaries(modules, in_shape[0], n_rows)
-    shapes = shape_chain(modules, in_shape)
-    total = 0
-    for r, row in enumerate(plan.cache_sizes(), start=1):
-        for lvl, rows in enumerate(row):  # cache over activation level lvl
-            _, w, c = shapes[lvl]
-            total += batch * rows * w * c * dtype_bytes
-    return total
+    return sum(twophase_cache_row_bytes(modules, in_shape, batch, n_rows,
+                                        dtype_bytes))
 
 
 def overlap_halo_bytes(modules, in_shape, batch, n_rows,

@@ -18,6 +18,19 @@ models the spatial axis is the *sequence* axis:
 
 Each helper wraps its chunk body in ``jax.checkpoint`` so BP recomputes one
 chunk at a time — the BP half of Alg. 1.
+
+Two layers live here:
+
+* the scan-closure helpers (:func:`chunked_apply` /
+  :func:`carry_scan_remat` / :func:`swa_overlap_chunks`) — the reference
+  implementations, consumed directly by the LM model code;
+* their row-program forms (:class:`ChunkedRowProgram` /
+  :class:`CarryScanRowProgram` / :class:`SwaOverlapRowProgram` +
+  ``make_*_apply``), the same math with the carry *named* and driven by
+  the shared executor (:mod:`repro.exec.rowprog`), which is what the
+  ``repro.exec`` seq engines build — it gives them boundary-cache
+  residency (device / host / recompute placement of the carried state)
+  for free.
 """
 
 from __future__ import annotations
@@ -97,3 +110,175 @@ def swa_overlap_chunks(attend: Callable, q, k, v, window: int,
             functools.partial(attend, q_offset=a, k_offset=a - halo))
         outs.append(body(qc, kc, vc))
     return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Row-program forms (repro.exec.rowprog): the carry made explicit
+# ---------------------------------------------------------------------------
+
+
+def _chunk_slice(x, r: int, n_chunks: int, axis: int):
+    s = x.shape[axis]
+    assert s % n_chunks == 0, f"seq {s} not divisible by {n_chunks} chunks"
+    c = s // n_chunks
+    return lax.slice_in_dim(x, r * c, (r + 1) * c, axis=axis)
+
+
+class ChunkedRowProgram:
+    """Halo-0 sequence chunks (:func:`chunked_apply`'s math) as a row
+    program: no carry — BP's per-chunk recompute falls out of the shared
+    executor instead of an explicit ``jax.checkpoint``."""
+
+    returns_carry = False
+
+    def __init__(self, fn: Callable, n_chunks: int, axis: int = 1):
+        self.fn = fn
+        self.n_rows = n_chunks
+        self.axis = axis
+
+    def init_carry(self, args):
+        return ()
+
+    def carry_names(self, r):
+        return ()
+
+    def row_args(self, args, r):
+        (x,) = args
+        return _chunk_slice(x, r, self.n_rows, self.axis)
+
+    def row_step(self, carry, xc, r):
+        return (), self.fn(xc)
+
+    def finish(self, ys):
+        return jnp.concatenate(ys, axis=self.axis)
+
+    def out_cotangent(self, g, r):
+        return _chunk_slice(g, r, self.n_rows, self.axis)
+
+
+class CarryScanRowProgram:
+    """2PS along the sequence (:func:`carry_scan_remat`'s math) as a row
+    program: the recurrent state is the named boundary cache
+    (``"state"``), so a ResidencySpec can offload or recompute it."""
+
+    returns_carry = True
+
+    def __init__(self, body: Callable, n_chunks: int, axis: int = 1):
+        self.body = body
+        self.n_rows = n_chunks
+        self.axis = axis
+
+    def init_carry(self, args):
+        return args[0]
+
+    def carry_names(self, r):
+        return "state"
+
+    def row_args(self, args, r):
+        return _chunk_slice(args[1], r, self.n_rows, self.axis)
+
+    def row_step(self, carry, xc, r):
+        return self.body(carry, xc)
+
+    def finish(self, ys):
+        return jnp.concatenate(ys, axis=self.axis)
+
+    def out_cotangent(self, g, r):
+        return _chunk_slice(g, r, self.n_rows, self.axis)
+
+
+class SwaOverlapRowProgram:
+    """OverL along the sequence (:func:`swa_overlap_chunks`'s math) as a
+    row program: chunks stay independent (no carry); each row's args are
+    the query chunk plus its replicated K/V halo slab, and the slicing's
+    transpose scatter-adds the halo gradients — exactly the hand-written
+    VJP the executor now owns."""
+
+    returns_carry = False
+
+    def __init__(self, attend: Callable, window: int, n_chunks: int):
+        self.attend = attend
+        self.window = window
+        self.n_rows = n_chunks
+
+    def init_carry(self, args):
+        return ()
+
+    def carry_names(self, r):
+        return ()
+
+    def _geometry(self, q):
+        S = q.shape[1]
+        assert S % self.n_rows == 0, \
+            f"seq {S} not divisible by {self.n_rows} chunks"
+        c = S // self.n_rows
+        return c, min(self.window, S)
+
+    def row_args(self, args, r):
+        q, k, v = args
+        c, halo = self._geometry(q)
+        a = r * c
+        pad = [(0, 0), (halo, 0), (0, 0), (0, 0)]
+        qc = lax.slice_in_dim(q, a, a + c, axis=1)
+        kc = lax.slice_in_dim(jnp.pad(k, pad), a, a + c + halo, axis=1)
+        vc = lax.slice_in_dim(jnp.pad(v, pad), a, a + c + halo, axis=1)
+        return qc, kc, vc
+
+    def row_step(self, carry, row_args, r):
+        qc, kc, vc = row_args
+        a = r * qc.shape[1]
+        halo = kc.shape[1] - qc.shape[1]
+        return (), self.attend(qc, kc, vc, q_offset=a, k_offset=a - halo)
+
+    def finish(self, ys):
+        return jnp.concatenate(ys, axis=1)
+
+    def out_cotangent(self, g, r):
+        c = g.shape[1] // self.n_rows
+        return lax.slice_in_dim(g, r * c, (r + 1) * c, axis=1)
+
+
+def _offloading(residency) -> bool:
+    """Does the spec actually move any cache off device?  Device-resident
+    plans keep the structured scan/checkpoint lowering below — identical
+    math in O(1) program size — and the unrolled row-program executor is
+    built only when there is a placement for it to apply (its per-row
+    unrolling is what buys the device_put schedule and the serialized
+    recompute chain)."""
+    return residency is not None and residency.offloads
+
+
+def make_chunked_apply(fn: Callable, n_chunks: int, axis: int = 1,
+                       residency=None):
+    """``apply(x)`` equal to :func:`chunked_apply` (falls back to plain
+    ``fn`` when the chunking cannot apply).  Carry-free: a ResidencySpec
+    has no caches to place here, so the scan/checkpoint lowering is used
+    regardless (``ChunkedRowProgram`` exists for uniformity and custom
+    registrations driving the executor directly)."""
+    del residency  # no carries to place (see docstring)
+    return lambda x: chunked_apply(fn, x, n_chunks, axis)
+
+
+def make_carry_scan_apply(body: Callable, n_chunks: int, axis: int = 1,
+                          residency=None):
+    """Row-program ``apply(carry_init, xs) -> (carry, out)`` equal to
+    :func:`carry_scan_remat`, with the carried state as a placeable
+    boundary cache.  Device-resident plans keep the O(1)-program-size
+    scan lowering; an offloading spec builds the unrolled executor that
+    realises the placement."""
+    if not _offloading(residency):
+        return lambda c0, xs: carry_scan_remat(body, c0, xs, n_chunks,
+                                               axis)
+    from repro.exec.rowprog import make_rowprog_apply
+    return make_rowprog_apply(
+        CarryScanRowProgram(body, n_chunks, axis), residency)
+
+
+def make_swa_overlap_apply(attend: Callable, window: int, n_chunks: int,
+                           residency=None):
+    """``apply(q, k, v)`` equal to :func:`swa_overlap_chunks`.  Carry-free
+    like :func:`make_chunked_apply`: residency has nothing to place, so
+    the checkpointed reference lowering is always used."""
+    del residency  # no carries to place (see make_chunked_apply)
+    return lambda q, k, v: swa_overlap_chunks(attend, q, k, v, window,
+                                              n_chunks)

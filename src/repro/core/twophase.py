@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -207,46 +206,59 @@ def twophase_forward(modules: Sequence, params, x, plan: TwoPhasePlan,
     return z
 
 
-def make_twophase_apply(modules: Sequence, h0: int, n_rows: int):
-    """Returns ``apply(params, x) -> z_L`` with 2PS custom VJP."""
+class TwoPhaseRowProgram:
+    """2PS as an explicit row program (:mod:`repro.exec.rowprog`): the
+    carry between rows IS the paper's SD boundary cache — one activation
+    slab per level ``l`` in ``1..L-1``, named ``"sd_l{l}"`` so a
+    :class:`~repro.exec.plan.ResidencySpec` can place each level
+    individually (device / host / recompute).  ``row_step`` is the
+    original :func:`_run_row` — the carry was always there, it just lived
+    inside a scan closure before this seam existed."""
+
+    returns_carry = False
+
+    def __init__(self, modules: Sequence, plan: TwoPhasePlan):
+        self.modules = modules
+        self.plan = plan
+        self.n_rows = plan.n_rows
+
+    def init_carry(self, args):
+        return ()  # row 0 imports nothing (it owns the full closure)
+
+    def carry_names(self, r: int):
+        if r == 0:
+            return ()
+        # caches_in[l-2] imports activation level l-1 for module l
+        return tuple(f"sd_l{lvl}" for lvl in range(1, self.plan.n_levels))
+
+    def row_args(self, args, r: int):
+        params, x = args
+        return params, _x_slice(self.plan, r, x)
+
+    def row_step(self, carry, row_args, r: int):
+        params, x_r = row_args
+        y, caches_out = _run_row(self.modules, params, self.plan, r, x_r,
+                                 list(carry))
+        return tuple(caches_out), y
+
+    def finish(self, ys):
+        return jnp.concatenate(ys, axis=1)
+
+    def out_cotangent(self, g, r: int):
+        os_, oe = self.plan.row_iv(self.plan.n_levels, r)
+        return lax.slice_in_dim(g, os_, oe, axis=1)
+
+
+def make_twophase_apply(modules: Sequence, h0: int, n_rows: int,
+                        residency=None):
+    """Returns ``apply(params, x) -> z_L`` with the 2PS row-centric custom
+    VJP, expressed as a row program so ``residency`` (a
+    :class:`~repro.exec.plan.ResidencySpec`, or None for device-resident)
+    governs where the inter-row boundary caches live."""
     plan = module_boundaries(modules, h0, n_rows)
     if not validate_plan(plan):
         raise ValueError(
             f"2PS plan with N={n_rows} invalid for H0={h0} over {len(modules)} "
             f"modules (granularity bound exceeded; use hybrid checkpointing)")
-
-    @jax.custom_vjp
-    def apply(params, x):
-        return twophase_forward(modules, params, x, plan)
-
-    def fwd(params, x):
-        z, caches = twophase_forward(modules, params, x, plan,
-                                     return_caches=True)
-        return z, (params, x, caches)
-
-    def bwd(res, g):
-        params, x, caches = res
-        dparams = jax.tree.map(jnp.zeros_like, params)
-        dx = jnp.zeros_like(x)
-        dcaches_out = ()  # last row exports no caches
-        for r in range(plan.n_rows - 1, -1, -1):
-            x_r = _x_slice(plan, r, x)
-            caches_in = caches[r]
-
-            def f_r(p, xs, cin, r=r):
-                y, cout = _run_row(modules, p, plan, r, xs, cin)
-                return y, tuple(cout)
-
-            _, vjp = jax.vjp(f_r, params, x_r, tuple(caches_in))
-            os_, oe = plan.row_iv(plan.n_levels, r)
-            g_r = lax.slice_in_dim(g, os_, oe, axis=1)
-            dp, dxr, dcin = vjp((g_r, dcaches_out))
-            dparams = jax.tree.map(jnp.add, dparams, dp)
-            lo = plan.need_lo[0][r]
-            hi = plan.bounds[0][r + 1]
-            dx = dx.at[:, lo:hi].add(dxr)
-            dcaches_out = dcin
-        return dparams, dx
-
-    apply.defvjp(fwd, bwd)
-    return apply
+    from repro.exec.rowprog import make_rowprog_apply
+    return make_rowprog_apply(TwoPhaseRowProgram(modules, plan), residency)

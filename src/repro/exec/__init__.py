@@ -3,40 +3,49 @@
 The LR-CNN split, made structural:
 
 * policy  — :class:`ExecutionPlan` / :class:`PlanRequest` (what to run:
-  engine, granularity N, segmentation, budget, feasibility), solved by
-  :class:`Planner` (Eqs. 7-16);
+  engine, granularity N, segmentation, budget, feasibility, mesh, kernel
+  backend, boundary-cache residency), solved by :class:`Planner`
+  (Eqs. 7-16);
 * mechanism — the engine registry (:func:`register_engine` /
   :func:`build_apply`), under which the six CNN strategies and the three
-  sequence-axis transplants are uniform entries.
+  sequence-axis transplants are uniform entries; the carry-based ones are
+  *row programs* (:mod:`repro.exec.rowprog`) driven by one shared
+  executor, which is where a plan's :class:`ResidencySpec` (device / host
+  / recompute placement of the inter-row boundary caches, with async
+  prefetch) is applied.
 
 Typical use::
 
     from repro.exec import MeshSpec, Planner, build_apply
     plan = Planner.for_budget(modules, (H, W, C), batch, budget_bytes,
                               mesh=MeshSpec.parse("data=8"))  # or mesh=None
-    print(plan.describe())   # engine, N, est bytes (global + per-device)
+    print(plan.describe())   # engine, N, est bytes, residency fallback
     apply_fn = build_apply(modules, plan)   # sharded when plan.mesh is set
 """
 
-from repro.exec.plan import ExecutionPlan, KernelSpec, MeshSpec, PlanRequest
+from repro.exec.plan import (
+    ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, ResidencySpec,
+)
 from repro.exec.planner import (
     BUDGET_PREFERENCE, CNN_ENGINES, PALLAS_ALTERNATE, PALLAS_ENGINES,
-    Planner, kernelize_plan, segment_row_capacity,
+    RESIDENCY_ENGINES, Planner, kernelize_plan, segment_row_capacity,
 )
 from repro.exec.registry import (
     EngineSpec, build_apply, get_engine, list_engines, register_engine,
     register_shard_wrapper,
 )
+from repro.exec.rowprog import RowProgram, make_rowprog_apply
 
 # importing the modules registers the built-in engines + shard wrappers
 from repro.exec import engines as _builtin_engines  # noqa: E402,F401
 from repro.exec import pallas_engines as _pallas_engines  # noqa: E402,F401
 
 __all__ = [
-    "ExecutionPlan", "KernelSpec", "MeshSpec", "PlanRequest", "Planner",
-    "EngineSpec",
+    "ExecutionPlan", "KernelSpec", "MeshSpec", "PlanRequest",
+    "ResidencySpec", "Planner", "EngineSpec",
     "register_engine", "get_engine", "list_engines", "build_apply",
     "register_shard_wrapper", "kernelize_plan",
+    "RowProgram", "make_rowprog_apply",
     "CNN_ENGINES", "BUDGET_PREFERENCE", "PALLAS_ALTERNATE",
-    "PALLAS_ENGINES", "segment_row_capacity",
+    "PALLAS_ENGINES", "RESIDENCY_ENGINES", "segment_row_capacity",
 ]

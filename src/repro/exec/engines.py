@@ -63,7 +63,8 @@ def _build_base(modules, plan: ExecutionPlan):
 def _build_ckp(modules, plan: ExecutionPlan):
     from repro.core.hybrid import make_hybrid_apply
     segs = _segment_specs(modules, plan, "column")
-    return make_hybrid_apply(modules, plan.h0, segs)
+    return make_hybrid_apply(modules, plan.h0, segs,
+                             residency=plan.residency)
 
 
 @register_engine("overlap", kind="cnn",
@@ -75,9 +76,11 @@ def _build_overlap(modules, plan: ExecutionPlan):
 
 
 @register_engine("twophase", kind="cnn",
-                 doc="2PS: sequential rows with boundary cache (Sec. IV-A)")
+                 doc="2PS: sequential rows with boundary cache (Sec. IV-A);"
+                     " a row program — plan.residency places the SD caches")
 def _build_twophase(modules, plan: ExecutionPlan):
-    return _tp.make_twophase_apply(modules, plan.h0, plan.n_rows)
+    return _tp.make_twophase_apply(modules, plan.h0, plan.n_rows,
+                                   residency=plan.residency)
 
 
 @register_engine("overlap_h", kind="cnn",
@@ -85,15 +88,18 @@ def _build_twophase(modules, plan: ExecutionPlan):
 def _build_overlap_h(modules, plan: ExecutionPlan):
     from repro.core.hybrid import make_hybrid_apply
     return make_hybrid_apply(modules, plan.h0,
-                             _segment_specs(modules, plan, "overlap"))
+                             _segment_specs(modules, plan, "overlap"),
+                             residency=plan.residency)
 
 
 @register_engine("twophase_h", kind="cnn",
-                 doc="2PS-H: 2PS rows inside sqrt(L) checkpoint segments")
+                 doc="2PS-H: 2PS rows inside sqrt(L) checkpoint segments; "
+                     "plan.residency places each segment's SD caches")
 def _build_twophase_h(modules, plan: ExecutionPlan):
     from repro.core.hybrid import make_hybrid_apply
     return make_hybrid_apply(modules, plan.h0,
-                             _segment_specs(modules, plan, "twophase"))
+                             _segment_specs(modules, plan, "twophase"),
+                             residency=plan.residency)
 
 
 # ---------------------------------------------------------------------------
@@ -103,43 +109,31 @@ def _build_twophase_h(modules, plan: ExecutionPlan):
 
 @register_engine("seq_chunked", kind="seq",
                  doc="halo-0 sequence chunks with per-chunk remat "
-                     "(per-token layers)")
+                     "(per-token layers); a carry-free row program")
 def _build_seq_chunked(modules, plan: ExecutionPlan):
-    fn = modules
-    axis = int(plan.get("axis", 1))
-
-    def apply(x):
-        return _sr.chunked_apply(fn, x, plan.n_rows, axis)
-
-    return apply
+    return _sr.make_chunked_apply(modules, plan.n_rows,
+                                  int(plan.get("axis", 1)),
+                                  residency=plan.residency)
 
 
 @register_engine("seq_carry_scan", kind="seq",
-                 doc="2PS along the sequence: carried state as boundary "
-                     "cache (recurrent scans)")
+                 doc="2PS along the sequence: carried state as the named "
+                     "boundary cache ('state'), placed by plan.residency")
 def _build_seq_carry_scan(modules, plan: ExecutionPlan):
-    body = modules
-    axis = int(plan.get("axis", 1))
-
-    def apply(carry_init, xs):
-        return _sr.carry_scan_remat(body, carry_init, xs, plan.n_rows, axis)
-
-    return apply
+    return _sr.make_carry_scan_apply(modules, plan.n_rows,
+                                     int(plan.get("axis", 1)),
+                                     residency=plan.residency)
 
 
 @register_engine("seq_swa_overlap", kind="seq",
                  doc="OverL along the sequence: replicated KV halo for "
-                     "sliding-window attention")
+                     "sliding-window attention; a carry-free row program")
 def _build_seq_swa_overlap(modules, plan: ExecutionPlan):
-    attend = modules
     window = int(plan.get("window", 0))
     if window <= 0:
         raise ValueError("seq_swa_overlap plan needs a 'window' extra")
-
-    def apply(q, k, v):
-        return _sr.swa_overlap_chunks(attend, q, k, v, window, plan.n_rows)
-
-    return apply
+    return _sr.make_swa_overlap_apply(modules, window, plan.n_rows,
+                                      residency=plan.residency)
 
 
 # ---------------------------------------------------------------------------

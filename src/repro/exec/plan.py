@@ -178,6 +178,114 @@ class KernelSpec:
         return cls(**d)
 
 
+#: legal boundary-cache placements (ResidencySpec values)
+RESIDENCY_POLICIES = ("device", "host", "recompute")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencySpec:
+    """Serializable boundary-cache residency policy — *where a row
+    program's inter-row carries live* between the moment a row exports
+    them and the moment they are consumed (next row in FP, the same row's
+    recomputation in BP).
+
+    LR-CNN's 2PS rows pin their bottom-boundary caches ("SD") from FP to
+    BP, which skews the per-row memory profile; the paper offers "two
+    solutions with different favorite scenarios" for that skew, and this
+    spec is their policy surface:
+
+    * ``"device"``    — caches stay in accelerator memory (the default;
+      today's behaviour, fastest).
+    * ``"host"``      — caches are offloaded to host memory after FP and
+      double-buffered back during BP (``prefetch_depth`` rows ahead, so
+      the ``jax.device_put`` round-trip overlaps the previous row's
+      backward compute — the weak inter-row dependency makes the copy
+      latency hideable).
+    * ``"recompute"`` — caches are not saved at all; BP regenerates them
+      by re-running the forward row chain (Chen et al.'s recompute end of
+      the retain-vs-recompute tradeoff: cheapest memory, extra FLOPs).
+
+    ``default`` applies to every named boundary cache; ``placements``
+    overrides individual caches by name (the names a row program declares
+    via ``carry_names`` — e.g. 2PS's per-level ``"sd_l3"``), so a plan can
+    e.g. keep the small shallow-level caches on device and offload only
+    the deep ones.  The spec is mechanism-agnostic plain data: the row-
+    program executor (:mod:`repro.exec.rowprog`) applies it uniformly to
+    every engine expressed as a row program.
+    """
+
+    default: str = "device"
+    placements: Tuple[Tuple[str, str], ...] = ()  # (cache name, policy)
+    prefetch_depth: int = 1
+
+    def __post_init__(self):
+        if self.default not in RESIDENCY_POLICIES:
+            raise ValueError(f"unknown residency policy {self.default!r}; "
+                             f"expected one of {RESIDENCY_POLICIES}")
+        placements = tuple(sorted((str(n), str(p))
+                                  for n, p in self.placements))
+        for n, p in placements:
+            if p not in RESIDENCY_POLICIES:
+                raise ValueError(f"unknown residency policy {p!r} for "
+                                 f"cache {n!r}; expected one of "
+                                 f"{RESIDENCY_POLICIES}")
+        names = [n for n, _ in placements]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate cache names in placements: "
+                             f"{names}")
+        object.__setattr__(self, "placements", placements)
+        if self.prefetch_depth < 0:
+            raise ValueError(f"prefetch_depth must be >= 0, got "
+                             f"{self.prefetch_depth}")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse(cls, s: str) -> Optional["ResidencySpec"]:
+        """Parse the CLI/request form: a bare policy name ("host" /
+        "recompute" / "device") becomes the uniform spec; "" means no
+        policy (None).  The one place the string vocabulary lives — every
+        CLI flag and PlanRequest funnels through here (the
+        :meth:`MeshSpec.parse` pattern)."""
+        s = s.strip()
+        if not s:
+            return None
+        return cls(default=s)
+
+    def placement(self, name: str) -> str:
+        """Policy for the boundary cache called ``name``."""
+        for n, p in self.placements:
+            if n == name:
+                return p
+        return self.default
+
+    @property
+    def offloads(self) -> bool:
+        """True when any cache leaves device memory (host or recompute)."""
+        return self.default != "device" \
+            or any(p != "device" for _, p in self.placements)
+
+    def describe(self) -> str:
+        bits = [self.default]
+        if self.placements:
+            bits += [f"{n}:{p}" for n, p in self.placements]
+        if self.default == "host" \
+                or any(p == "host" for _, p in self.placements):
+            bits.append(f"prefetch={self.prefetch_depth}")
+        return ",".join(bits)
+
+    def to_dict(self) -> dict:
+        return {"default": self.default,
+                "placements": [list(p) for p in self.placements],
+                "prefetch_depth": self.prefetch_depth}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ResidencySpec":
+        return cls(default=d.get("default", "device"),
+                   placements=tuple(tuple(p)
+                                    for p in d.get("placements", ())),
+                   prefetch_depth=d.get("prefetch_depth", 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanRequest:
     """What a config *asks for* — resolved to an :class:`ExecutionPlan` by
@@ -194,6 +302,8 @@ class PlanRequest:
     mesh: str = ""                    # "data=8[,model=2]"; "" = single-device
     kernel: str = ""                  # "pallas" = kernel-backed engines;
     #                                   "lax"/"" = reference engines
+    residency: str = ""               # "host"/"recompute" = boundary-cache
+    #                                   residency policy; ""/"device" = HBM
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,6 +321,12 @@ class ExecutionPlan:
     ``budget // mesh.data`` are what one accelerator sees, and
     :meth:`per_device` projects the plan onto a single device (the sub-plan
     a one-device host replays).
+
+    ``residency`` (when set) makes boundary-cache placement part of the
+    policy: the row-program executor honours it uniformly for every
+    carry-based engine (:mod:`repro.exec.rowprog`), and the Planner prices
+    it (host-offload / recompute terms next to the Eqs. 7-16 accounting).
+    It composes orthogonally with ``mesh`` and ``kernel``.
     """
 
     engine: str
@@ -226,6 +342,7 @@ class ExecutionPlan:
     feasible: bool = True
     mesh: Optional[MeshSpec] = None
     kernel: Optional[KernelSpec] = None
+    residency: Optional[ResidencySpec] = None
     extras: Tuple[Tuple[str, Any], ...] = ()
 
     def __post_init__(self):
@@ -240,6 +357,9 @@ class ExecutionPlan:
         if isinstance(self.kernel, dict):
             object.__setattr__(self, "kernel",
                                KernelSpec.from_dict(self.kernel))
+        if isinstance(self.residency, dict):
+            object.__setattr__(self, "residency",
+                               ResidencySpec.from_dict(self.residency))
         if not self.est_bytes_per_device and self.est_bytes:
             object.__setattr__(self, "est_bytes_per_device",
                                self.est_bytes // self.data_shards)
@@ -293,12 +413,13 @@ class ExecutionPlan:
                  n_segments: Optional[int] = None,
                  mesh: Optional[MeshSpec] = None,
                  kernel: Optional[KernelSpec] = None,
+                 residency: Optional[ResidencySpec] = None,
                  **extras) -> "ExecutionPlan":
         """An unestimated plan pinning (engine, N) — the escape hatch for
         callers that already know what they want (benchmarks, tests)."""
         return cls(engine=engine, n_rows=n_rows, in_shape=in_shape,
                    n_segments=n_segments, mesh=mesh, kernel=kernel,
-                   extras=tuple(extras.items()))
+                   residency=residency, extras=tuple(extras.items()))
 
     # ------------------------------------------------------------------
     def describe(self) -> str:
@@ -317,6 +438,8 @@ class ExecutionPlan:
             bits.append(f"feasible={self.feasible}")
         if self.kernel is not None:
             bits.append(f"kernel={self.kernel.backend}")
+        if self.residency is not None:
+            bits.append(f"residency={self.residency.describe()}")
         for k, v in self.extras:
             bits.append(f"{k}={v}")
         return "ExecutionPlan(" + " ".join(bits) + ")"
@@ -329,6 +452,8 @@ class ExecutionPlan:
         d["mesh"] = self.mesh.to_dict() if self.mesh is not None else None
         d["kernel"] = self.kernel.to_dict() if self.kernel is not None \
             else None
+        d["residency"] = self.residency.to_dict() \
+            if self.residency is not None else None
         return d
 
     @classmethod
@@ -342,6 +467,8 @@ class ExecutionPlan:
             d["mesh"] = MeshSpec.from_dict(d["mesh"])
         if d.get("kernel") is not None:
             d["kernel"] = KernelSpec.from_dict(d["kernel"])
+        if d.get("residency") is not None:
+            d["residency"] = ResidencySpec.from_dict(d["residency"])
         return cls(**d)
 
     def to_json(self) -> str:

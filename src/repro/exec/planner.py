@@ -24,6 +24,22 @@ same Eqs. 7-16 for what ONE device holds.  The emitted plan records global
 numbers plus ``est_bytes_per_device`` and carries the mesh, so a logged
 plan replays identically on any host (``plan.per_device()`` is the
 single-device projection).
+
+Residency-aware planning (``residency=`` on ``estimate`` / ``plan`` /
+``solve`` / ``for_budget``): with a :class:`ResidencySpec` whose default
+policy moves the 2PS boundary caches off-device, the Eq. 12 SD term —
+the whole FP->BP pinned cache volume — is replaced by a *transit buffer*
+(the largest single row's caches, times ``1 + prefetch_depth`` live
+fetches for ``host`` or the 2-row recompute working set for
+``recompute``), which flattens the skewed per-row profile the paper's
+"two solutions" target.  :meth:`Planner.residencize` is the fallback
+pass: given a budget the device-only solve rejects, it retries the
+carry-based engines under host then recompute residency and records the
+chosen policy and why under the ``residencized`` extra (the
+``kernel_fallback`` pattern, in the fitting direction).  Pricing applies
+the offloaded terms only when every cache leaves the device: a per-cache
+override back to ``device`` keeps the full device-resident estimate, so
+the planner is never optimistic about what stays pinned.
 """
 
 from __future__ import annotations
@@ -34,7 +50,8 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import rowplan as _rp
 from repro.exec.plan import (
-    ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, batch_shards,
+    ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, ResidencySpec,
+    batch_shards,
 )
 
 CNN_ENGINES = ("base", "ckp", "overlap", "twophase", "overlap_h",
@@ -45,6 +62,20 @@ BUDGET_PREFERENCE = ("base", "twophase", "overlap", "twophase_h",
 #: per-segment strategy of each checkpointed engine
 INNER_STRATEGY = {"ckp": "column", "overlap_h": "overlap",
                   "twophase_h": "twophase"}
+#: engines whose device-byte estimate changes under an offloading
+#: ResidencySpec — the carry-based CNN engines (OverL replicates its halo
+#: instead of carrying it, so residency cannot shrink it)
+RESIDENCY_ENGINES = ("twophase", "twophase_h")
+
+
+def _offloads(residency: Optional[ResidencySpec]) -> bool:
+    """True when the spec moves EVERY cache off-device (default host /
+    recompute with no per-cache override back to device).  Pricing must
+    never be optimistic: a spec that pins some caches on device keeps the
+    full device-resident estimate — the offloaded pricing applies only
+    when the whole SD volume actually leaves."""
+    return residency is not None and residency.default != "device" \
+        and all(p != "device" for _, p in residency.placements)
 
 #: lax engine -> its pallas-backed alternate with the SAME call signature
 #: (base and overlap both map to overlap_pallas: the kernel's row tiling is
@@ -362,7 +393,39 @@ class Planner(_ServePlannerMixin):
         return derive_segments(self.modules, self.in_shape[0], inner,
                                n_rows, n_segments)
 
-    def _estimate_segmented(self, segments, inner: str) -> int:
+    def _twophase_offloaded(self, modules, in_shape, n_rows: int,
+                            residency: ResidencySpec) -> int:
+        """Device bytes of a 2PS block when its SD caches leave device
+        memory: the Eq. 8 BP baseline plus the transit buffer — the
+        largest single row's caches times the number of rows' worth that
+        are concurrently device-resident (``1 + prefetch_depth`` in-flight
+        fetches for host residency; producer + consumer of the serialized
+        recompute chain for recompute)."""
+        base = _rp.omega_bp(modules, in_shape, self.dev_batch, n_rows,
+                            self.dtype_bytes)
+        rows = _rp.twophase_cache_row_bytes(modules, in_shape,
+                                            self.dev_batch, n_rows,
+                                            self.dtype_bytes)
+        buf = max(rows) if rows else 0
+        # transit rows by policy, summed when a mixed spec uses both (the
+        # in-flight fetches and the recompute chain's regenerated carry
+        # can be live together — price the union, never the optimistic
+        # default alone)
+        policies = {residency.default} | {p for _, p in
+                                          residency.placements}
+        mult = 0
+        if "host" in policies:
+            mult += 1 + residency.prefetch_depth
+        if "recompute" in policies:
+            mult += 2
+        # never price more transit rows than exist (N-1 importing rows):
+        # at that point every cache is device-resident anyway
+        mult = min(mult, max(1, n_rows - 1))
+        return base + mult * buf
+
+    def _estimate_segmented(self, segments, inner: str,
+                            residency: Optional[ResidencySpec]
+                            = None) -> int:
         """Checkpoint bytes (segment-input maps stay live FP->BP) + worst
         per-segment peak under the inner strategy.  Per-device bytes."""
         shapes = self._shapes()
@@ -375,6 +438,8 @@ class Planner(_ServePlannerMixin):
             sub_shape = shapes[a]
             if inner == "column":
                 est = _rp.omega_column(sub, sub_shape, B, db)
+            elif inner == "twophase" and _offloads(residency):
+                est = self._twophase_offloaded(sub, sub_shape, n, residency)
             else:
                 est = _rp.estimate_bytes(sub, sub_shape, B, inner, n, db)
             worst = max(worst, est)
@@ -382,21 +447,27 @@ class Planner(_ServePlannerMixin):
 
     def estimate(self, engine: str, n_rows: int,
                  n_segments: Optional[int] = None,
-                 segments: Tuple[Tuple[int, int, int], ...] = ()) -> int:
+                 segments: Tuple[Tuple[int, int, int], ...] = (),
+                 residency: Optional[ResidencySpec] = None) -> int:
         """Peak activation bytes ONE device holds (== global bytes when no
-        mesh is set)."""
+        mesh is set).  ``residency`` re-prices the carry-based engines'
+        SD caches (see the module docstring); the other engines carry
+        nothing, so their estimate is residency-invariant."""
         if engine in ("base",):
             return _rp.omega_column(self.modules, self.in_shape,
                                     self.dev_batch,
                                     self.dtype_bytes) + self.xi
         if engine in ("overlap", "twophase"):
+            if engine == "twophase" and _offloads(residency):
+                return self._twophase_offloaded(
+                    self.modules, self.in_shape, n_rows, residency) + self.xi
             return _rp.estimate_bytes(self.modules, self.in_shape,
                                       self.dev_batch, engine, n_rows,
                                       self.dtype_bytes, self.xi)
         if engine in INNER_STRATEGY:
             inner = INNER_STRATEGY[engine]
             segs = segments or self._segments(n_rows, inner, n_segments)
-            return self._estimate_segmented(segs, inner) + self.xi
+            return self._estimate_segmented(segs, inner, residency) + self.xi
         raise ValueError(f"unknown CNN engine {engine!r}; known: "
                          f"{list(CNN_ENGINES)}")
 
@@ -405,15 +476,19 @@ class Planner(_ServePlannerMixin):
     # ------------------------------------------------------------------
     def plan(self, engine: str, n_rows: int = 1,
              n_segments: Optional[int] = None, budget: int = 0,
+             residency: Optional[ResidencySpec] = None,
              **extras) -> ExecutionPlan:
         """Resolve an explicit (engine, N) request into a full plan with
-        estimates and (for checkpointed engines) pinned segments."""
+        estimates and (for checkpointed engines) pinned segments.
+        ``residency`` is both priced (carry-based engines) and recorded on
+        the plan, so the emitted policy replays verbatim."""
         n_rows = max(1, n_rows)
         segments: Tuple[Tuple[int, int, int], ...] = ()
         if engine in INNER_STRATEGY:
             segments = self._segments(n_rows, INNER_STRATEGY[engine],
                                       n_segments)
-        dev_est = self.estimate(engine, n_rows, n_segments, segments)
+        dev_est = self.estimate(engine, n_rows, n_segments, segments,
+                                residency)
         dev_budget = budget // self.shards
         return ExecutionPlan(
             engine=engine, n_rows=n_rows, in_shape=self.in_shape,
@@ -421,7 +496,8 @@ class Planner(_ServePlannerMixin):
             n_segments=n_segments, segments=segments,
             est_bytes=dev_est * self.shards, est_bytes_per_device=dev_est,
             budget=budget, feasible=(budget == 0 or dev_est < dev_budget),
-            mesh=self.mesh, extras=tuple(extras.items()))
+            mesh=self.mesh, residency=residency,
+            extras=tuple(extras.items()))
 
     def kernelize(self, plan: ExecutionPlan, spec,
                   vmem_limit: int = PALLAS_VMEM_LIMIT) -> ExecutionPlan:
@@ -434,7 +510,10 @@ class Planner(_ServePlannerMixin):
         """Turn a config-level :class:`PlanRequest` into a plan.  A
         ``request.mesh`` string ("data=8[,model=2]") overrides the
         planner's own mesh; ``request.kernel`` ("pallas"/"lax") applies
-        the kernel-backend policy to whatever plan resolves."""
+        the kernel-backend policy to whatever plan resolves;
+        ``request.residency`` ("host"/"recompute"/"device") pins the
+        boundary-cache residency policy (estimates re-priced for the
+        carry-based engines)."""
         if request.mesh:
             mesh = MeshSpec.parse(request.mesh)
             if mesh != self.mesh:
@@ -442,19 +521,22 @@ class Planner(_ServePlannerMixin):
                                self.dtype_bytes, self.xi, self.n_max,
                                mesh=mesh).resolve(
                                    dataclasses_replace(request, mesh=""))
-        plan = self._resolve(request)
+        plan = self._resolve(request, ResidencySpec.parse(request.residency))
         if request.kernel:
             plan = self.kernelize(plan, request.kernel)
         return plan
 
-    def _resolve(self, request: PlanRequest) -> ExecutionPlan:
+    def _resolve(self, request: PlanRequest,
+                 residency: Optional[ResidencySpec] = None) -> ExecutionPlan:
         budget = int(request.budget_gb * 2**30)
         if request.engine and request.n_rows:
             return self.plan(request.engine, request.n_rows,
-                             request.n_segments, budget=budget)
+                             request.n_segments, budget=budget,
+                             residency=residency)
         if request.engine:
             return self.solve(request.engine, budget,
-                              n_segments=request.n_segments)
+                              n_segments=request.n_segments,
+                              residency=residency)
         if request.n_rows:
             # engine auto, N pinned: first engine (Table I order) feasible
             # at exactly this granularity
@@ -470,7 +552,8 @@ class Planner(_ServePlannerMixin):
                                                   request.n_rows)):
                         continue  # exceeds the 2PS granularity bound
                     p = self.plan(engine, request.n_rows,
-                                  request.n_segments, budget=budget)
+                                  request.n_segments, budget=budget,
+                                  residency=residency)
                 except ValueError:  # N invalid for this engine's bounds
                     continue
                 if p.feasible:
@@ -481,60 +564,143 @@ class Planner(_ServePlannerMixin):
                 return best
         return self.for_budget(self.modules, self.in_shape, self.batch,
                                budget, dtype_bytes=self.dtype_bytes,
-                               xi=self.xi, n_max=self.n_max, mesh=self.mesh)
+                               xi=self.xi, n_max=self.n_max, mesh=self.mesh,
+                               residency=residency)
 
     # ------------------------------------------------------------------
     # budget-driven solving
     # ------------------------------------------------------------------
     def solve(self, engine: str, budget: int,
-              n_segments: Optional[int] = None) -> ExecutionPlan:
+              n_segments: Optional[int] = None,
+              residency: Optional[ResidencySpec] = None) -> ExecutionPlan:
         """min N s.t. estimate(engine, N) < budget (Eqs. 9/10/12/16 plus
         the Sec. IV validity bounds), as a plan.  Under a mesh the solve is
-        per-device: per-device batch against per-device budget."""
+        per-device: per-device batch against per-device budget.  Under an
+        offloading ``residency`` the 2PS estimates use the repriced SD
+        terms, so the minimal N can be smaller than the device-only one."""
+        if engine == "twophase" and _offloads(residency):
+            # the repriced solve: the same validity-bounded scan solve_n
+            # does, against the offloaded estimate
+            return self._scan_n(engine, self._valid_twophase_ns(), budget,
+                                residency=residency)
         if engine in ("base", "overlap", "twophase"):
             r = _rp.solve_n(self.modules, self.in_shape, self.dev_batch,
                             budget // self.shards, engine, self.dtype_bytes,
                             self.xi, self.n_max)
-            return self.plan(engine, max(1, r.n_rows), budget=budget)
+            return self.plan(engine, max(1, r.n_rows), budget=budget,
+                             residency=residency)
         if engine == "ckp":  # granularity-free: one estimate
-            return self.plan(engine, 1, n_segments, budget=budget)
+            return self.plan(engine, 1, n_segments, budget=budget,
+                             residency=residency)
         # hybrid engines: per-segment granularity caps bound the search
         inner = INNER_STRATEGY[engine]
         caps = [cap for _, _, cap in segment_row_capacity(
             self.modules, self.in_shape[0], inner, n_segments)]
+        return self._scan_n(engine,
+                            range(1, min(self.n_max, max(caps)) + 1),
+                            budget, n_segments, residency)
+
+    def _valid_twophase_ns(self):
+        """N = 1, 2, ... while the 2PS granularity bound admits N (the
+        validity scan solve_n performs, factored out for the repriced
+        residency solve)."""
+        from repro.core import twophase as _tp
+        for n in range(1, self.n_max + 1):
+            if n > 1:
+                try:
+                    if not _tp.validate_plan(_tp.module_boundaries(
+                            self.modules, self.in_shape[0], n)):
+                        return
+                except ValueError:
+                    return
+            yield n
+
+    def _scan_n(self, engine: str, ns, budget: int,
+                n_segments: Optional[int] = None,
+                residency: Optional[ResidencySpec] = None
+                ) -> Optional[ExecutionPlan]:
+        """First feasible plan over the candidate granularities ``ns``;
+        otherwise the smallest-estimate loser (estimates need not be
+        monotonic in N — segment boundaries move and the residency
+        transit multiplier saturates)."""
         best: Optional[ExecutionPlan] = None
-        for n in range(1, min(self.n_max, max(caps)) + 1):
-            p = self.plan(engine, n, n_segments, budget=budget)
+        for n in ns:
+            p = self.plan(engine, n, n_segments, budget=budget,
+                          residency=residency)
             if p.feasible:
                 return p
             if best is None or p.est_bytes < best.est_bytes:
                 best = p
         return best
 
+    def residencize(self, plan: ExecutionPlan,
+                    budget: Optional[int] = None) -> ExecutionPlan:
+        """Fit a device-infeasible plan by moving boundary caches off
+        device — the fallback pass ``for_budget`` runs when the device-
+        only solve rejects a budget.
+
+        Retries the carry-based engines (the plan's own engine first when
+        it is one) under ``host`` then ``recompute`` residency, in that
+        order: host costs copies the inter-row prefetch hides, recompute
+        costs O(N^2) extra row steps — the paper's "two solutions with
+        different favorite scenarios".  The first feasible re-solve wins
+        and records the chosen policy and why under the ``residencized``
+        extra (the ``kernel_fallback`` pattern); if nothing fits, the
+        original plan is returned unchanged."""
+        budget = plan.budget if budget is None else budget
+        if plan.feasible or not budget or _offloads(plan.residency):
+            return plan
+        candidates = list(RESIDENCY_ENGINES)
+        if plan.engine in candidates:  # the rejected engine gets first try
+            candidates.remove(plan.engine)
+            candidates.insert(0, plan.engine)
+        dev_budget = budget // self.shards
+        for policy in ("host", "recompute"):
+            spec = ResidencySpec(default=policy)
+            for engine in candidates:
+                p = self.solve(engine, budget, residency=spec)
+                if p is not None and p.feasible:
+                    return p.with_extras(residencized=(
+                        f"device-only solve infeasible (best "
+                        f"{plan.engine} needs {plan.est_bytes_per_device} "
+                        f"B/device > budget {dev_budget}); {policy} "
+                        f"residency of {engine} boundary caches fits at "
+                        f"N={p.n_rows}"))
+        return plan
+
     @classmethod
     def for_budget(cls, modules: Sequence, in_shape: Tuple[int, int, int],
                    batch: int, budget: int, dtype_bytes: int = 4,
                    xi: int = 0, n_max: int = 64,
                    candidates: Sequence[str] = BUDGET_PREFERENCE,
-                   mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
+                   mesh: Optional[MeshSpec] = None,
+                   residency: Optional[ResidencySpec] = None
+                   ) -> ExecutionPlan:
         """Auto-select strategy *and* granularity under a byte budget.
 
         Tries ``candidates`` in order of increasing runtime overhead
-        (Table I / Fig. 8) and returns the first feasible plan; if nothing
-        fits, returns the infeasible plan with the smallest estimate so the
-        caller can see how far over budget it is.  With ``mesh=`` both the
-        batch and the budget are divided over the data axis (per-device
-        solve); the returned plan carries the mesh.
+        (Table I / Fig. 8) and returns the first feasible plan.  If no
+        device-resident plan fits (and the caller didn't pin a residency
+        policy), the :meth:`residencize` pass retries the carry-based
+        engines with their boundary caches moved off device — the budgets
+        the device-only solve rejects are exactly the ones host offload /
+        recompute exist for.  Failing that too, returns the infeasible
+        plan with the smallest estimate so the caller can see how far over
+        budget it is.  With ``mesh=`` both the batch and the budget are
+        divided over the data axis (per-device solve); the returned plan
+        carries the mesh.
         """
         planner = cls(modules, in_shape, batch, dtype_bytes, xi, n_max,
                       mesh=mesh)
         best: Optional[ExecutionPlan] = None
         for engine in candidates:
-            p = planner.solve(engine, budget)
+            p = planner.solve(engine, budget, residency=residency)
             if p.feasible:
                 return p
             if best is None or p.est_bytes < best.est_bytes:
                 best = p
+        if residency is None:
+            return planner.residencize(best, budget)
         return best
 
     # ------------------------------------------------------------------
@@ -561,10 +727,15 @@ class Planner(_ServePlannerMixin):
                        engine: str = "seq_chunked", window: int = 0,
                        axis: int = 1, dtype_bytes: int = 4,
                        n_max: int = 64, head_dim: int = 0,
-                       mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
+                       mesh: Optional[MeshSpec] = None,
+                       residency: Optional[ResidencySpec] = None
+                       ) -> ExecutionPlan:
         """Smallest chunk count (dividing ``seq_len``) that fits ``budget``
         (per-device under a mesh); infeasible plan at the largest divisor
-        otherwise."""
+        otherwise.  ``residency`` rides along on the plan (the sequence
+        carries — recurrent states — are small, so the Eq. 7 estimate is
+        not re-priced; the row-program executor still honours the
+        placement)."""
         shards = cls._seq_shards(mesh, batch)
         divisors = [n for n in range(1, min(n_max, seq_len) + 1)
                     if seq_len % n == 0]
@@ -582,7 +753,8 @@ class Planner(_ServePlannerMixin):
                 dtype_bytes=dtype_bytes, est_bytes=est * shards,
                 est_bytes_per_device=est, budget=budget,
                 feasible=(budget == 0 or est < budget // shards),
-                mesh=mesh, extras=tuple(extras.items()))
+                mesh=mesh, residency=residency,
+                extras=tuple(extras.items()))
             if plan.feasible:
                 return plan
             best = plan
@@ -590,11 +762,14 @@ class Planner(_ServePlannerMixin):
 
     @classmethod
     def for_model(cls, cfg, batch: int, seq_len: int, budget: int = 0,
-                  mesh: Optional[MeshSpec] = None) -> ExecutionPlan:
+                  mesh: Optional[MeshSpec] = None,
+                  residency: Optional[ResidencySpec] = None
+                  ) -> ExecutionPlan:
         """Sequence plan for a :class:`~repro.models.lm.config.ModelConfig`:
         engine from the layer pattern, N from the budget (or the config's
         ``row_chunks`` when unconstrained).  ``mesh=`` makes the budget
-        per-device, exactly as on the CNN side."""
+        per-device, exactly as on the CNN side; ``residency=`` rides along
+        (see :meth:`for_budget_seq`)."""
         kinds = set(cfg.layer_kinds())
         if kinds & {"mamba", "mlstm", "slstm"}:
             engine, window = "seq_carry_scan", 0
@@ -608,7 +783,8 @@ class Planner(_ServePlannerMixin):
             return cls.for_budget_seq(seq_len, cfg.d_model, batch, budget,
                                       d_ff=cfg.d_ff, engine=engine,
                                       window=window, dtype_bytes=dtype_bytes,
-                                      head_dim=head_dim, mesh=mesh)
+                                      head_dim=head_dim, mesh=mesh,
+                                      residency=residency)
         shards = cls._seq_shards(mesh, batch)
         n = max(1, cfg.row_chunks)
         est = cls.seq_estimate(seq_len, cfg.d_model, batch // shards, n,
@@ -622,6 +798,7 @@ class Planner(_ServePlannerMixin):
                              batch=batch, dtype_bytes=dtype_bytes,
                              est_bytes=est * shards,
                              est_bytes_per_device=est, mesh=mesh,
+                             residency=residency,
                              extras=tuple(extras.items()))
 
 

@@ -3,8 +3,8 @@ seam between execution plans (policy) and row-centric mechanisms.
 
 Every engine — the six CNN trunk strategies *and* the three sequence-axis
 transplants — registers here under a string key, so CNN trunks and LM
-sequence chunking are two instances of one abstraction.  Future backends
-(async boundary-cache prefetch, multi-backend kernels) plug in with
+sequence chunking are two instances of one abstraction.  New mechanisms
+(kernel backends, alternative carry schedules) plug in with
 ``register_engine`` without touching any call site.
 
 Sharding is layered HERE, not in the engines: when ``plan.mesh`` is set,
@@ -15,6 +15,34 @@ axis via ``NamedSharding`` constraints.  Engines stay single-device code;
 one wrapper per kind shards all of them — a kind without a wrapper (e.g.
 ``serve``, whose ServeEngine/CachePool consume ``plan.mesh`` themselves)
 passes through untouched.
+
+Boundary-cache residency (async host offload / prefetch / recompute of
+the inter-row carries) is likewise NOT engine code: carry-based engines
+are *row programs* — ``init_carry / row_step / finish`` with the caches
+named in the carry (:mod:`repro.exec.rowprog`) — and the shared executor
+applies the plan's :class:`~repro.exec.plan.ResidencySpec` uniformly.
+Registering a new carry-based engine therefore inherits offload,
+double-buffered inter-row prefetch, and recompute for free::
+
+    from repro.exec import register_engine
+    from repro.exec.rowprog import RowProgram, make_rowprog_apply
+
+    class MyProgram(RowProgram):            # names its boundary caches
+        def carry_names(self, r): return ("my_cache",)
+        def init_carry(self, args): ...
+        def row_args(self, args, r): ...    # linear slice of the inputs
+        def row_step(self, carry, row_args, r): ...
+        def finish(self, ys): ...
+        def out_cotangent(self, g, r): ...
+
+    @register_engine("my_carry_engine", kind="cnn", doc="...")
+    def _build(modules, plan):              # plan: ExecutionPlan
+        prog = MyProgram(modules, plan)
+        return make_rowprog_apply(prog, plan.residency)
+
+The shard wrapper still applies on top (the executor's apply fn is
+ordinary single-device code), so the same registration is simultaneously
+shardable, kernelizable, and residency-aware.
 """
 
 from __future__ import annotations

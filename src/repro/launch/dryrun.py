@@ -21,14 +21,15 @@ import jax
 from repro.analysis.costmodel import analyze as cost_analyze
 from repro.analysis.roofline import analyze
 from repro.configs import get_config, list_configs
-from repro.exec import Planner, kernelize_plan
+from repro.exec import Planner, ResidencySpec, kernelize_plan
 from repro.launch.mesh import make_production_mesh, production_mesh_spec
 from repro.launch.steps import SHAPES, build_jitted, shape_applicable
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
             out_dir: str, verbose: bool = True, overrides: dict = None,
-            tag_suffix: str = "", kernel: str = "lax") -> dict:
+            tag_suffix: str = "", kernel: str = "lax",
+            residency: str = "") -> dict:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -43,7 +44,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
     # single-device projection rides along so the artefact replays on
     # any host
     plan = Planner.for_model(cfg, shape.batch, shape.seq,
-                             mesh=production_mesh_spec(multi_pod=multi_pod))
+                             mesh=production_mesh_spec(multi_pod=multi_pod),
+                             residency=ResidencySpec.parse(residency))
     if kernel:
         # the chosen KernelSpec (or its lax fallback + reason) is part of
         # the artefact: a dry-run record fully pins kernel policy too
@@ -134,6 +136,10 @@ def main():
                     help="kernel backend recorded on the exec plan "
                          "(pallas swaps in the kernel-backed engine when "
                          "the tiling is feasible)")
+    ap.add_argument("--residency", default="",
+                    choices=["", "device", "host", "recompute"],
+                    help="boundary-cache residency policy recorded on "
+                         "the exec plan (artefacts replay it verbatim)")
     args = ap.parse_args()
     overrides = _parse_overrides(args.set)
 
@@ -149,7 +155,8 @@ def main():
                 t0 = time.time()
                 rec = run_one(arch, sh, mp, args.fsdp, args.out,
                               overrides=overrides, tag_suffix=args.tag,
-                              kernel=args.kernel)
+                              kernel=args.kernel,
+                              residency=args.residency)
                 dt = time.time() - t0
                 print(f"{rec['status']:8s} {arch:24s} {sh:12s} "
                       f"{rec['mesh']:8s} {dt:7.1f}s "

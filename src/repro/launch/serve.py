@@ -47,6 +47,10 @@ def main():
                          "--budget-gb is divided by the data extent into "
                          "per-device slices and decode slots shard across "
                          "the data axis")
+    ap.add_argument("--residency", default="",
+                    choices=["", "device", "host", "recompute"],
+                    help="boundary-cache residency policy recorded on "
+                         "each prompt's budget-chunked prefill plan")
     args = ap.parse_args()
 
     import jax
@@ -93,7 +97,8 @@ def main():
     report, plan = serve(params, cfg, requests, budget=budget,
                          n_slots=0 if budget else args.batch,
                          enc_len=enc_len, prefill_budget=budget,
-                         mesh=mesh_spec, walltime_fn=time.perf_counter)
+                         mesh=mesh_spec, residency=args.residency,
+                         walltime_fn=time.perf_counter)
     wall = time.perf_counter() - t0
 
     print("pool plan:", plan.describe())

@@ -27,6 +27,13 @@ Two modes:
             plan (selection or fallback reason) is recorded and printed,
             but the jitted LM step still executes cfg-level remat, like
             the plan's engine name there generally.
+* residency: add --residency host (or recompute): the resolved plan
+            carries a ResidencySpec and the carry-based engines place
+            their inter-row boundary caches accordingly — host offload
+            with double-buffered prefetch, or BP-side recomputation.
+            Executes on the CNN path (the row-program executor applies
+            the policy); recorded-only on the LM path, like --kernel.
+            Composes with --mesh and --kernel.
 
 Checkpoints + metrics land in --out.
 """
@@ -56,7 +63,7 @@ def train_lm(args):
     import dataclasses
 
     from repro.configs import get_config, get_reduced
-    from repro.exec import MeshSpec, Planner
+    from repro.exec import MeshSpec, Planner, ResidencySpec
     from repro.models.lm import model as LM
     from repro.models.lm import encdec as ED
     from repro.launch.steps import make_train_step
@@ -70,9 +77,15 @@ def train_lm(args):
         # budget-driven sequence-axis plan: pick the chunk count (Eq. 7
         # along the token axis, per-device under --mesh) and engine from
         # the layer pattern
+        residency_spec = ResidencySpec.parse(args.residency)
         plan = Planner.for_model(cfg, args.batch, args.seq,
                                  budget=int(args.budget_gb * 2**30),
-                                 mesh=mesh_spec)
+                                 mesh=mesh_spec, residency=residency_spec)
+        if args.residency:
+            # recorded policy only, like --kernel: the jitted LM step
+            # executes cfg-level remat, not registry engines
+            print("residency policy recorded on plan; LM step runs "
+                  "cfg-level remat")
         if args.kernel:
             from repro.exec import kernelize_plan
             plan = kernelize_plan(plan, args.kernel)
@@ -184,6 +197,8 @@ def train_cnn(args):
         req = dataclasses.replace(req, n_rows=args.rows)
     if args.kernel:
         req = dataclasses.replace(req, kernel=args.kernel)
+    if args.residency:
+        req = dataclasses.replace(req, residency=args.residency)
     # the paper's ξ: params + grads + optimizer state live beside activations
     xi = 3 * sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params))
     plan = Planner(mods, shape, batch, xi=xi, mesh=mesh_spec).resolve(req)
@@ -260,6 +275,14 @@ def main():
                          "feasible, with automatic lax fallback otherwise; "
                          "executes on the CNN path, recorded-only on the "
                          "LM path (needs --budget-gb there)")
+    ap.add_argument("--residency", default="",
+                    choices=["", "device", "host", "recompute"],
+                    help="boundary-cache residency policy for the carry-"
+                         "based engines: 'host' offloads the inter-row "
+                         "caches with double-buffered prefetch, "
+                         "'recompute' regenerates them in BP; executes "
+                         "on the CNN path, recorded-only on the LM path "
+                         "(needs --budget-gb there)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")

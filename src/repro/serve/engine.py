@@ -63,7 +63,7 @@ class ServeEngine:
     """Holds params + per-family jitted step functions for one model."""
 
     def __init__(self, params, cfg, plan: ExecutionPlan,
-                 prefill_budget: int = 0):
+                 prefill_budget: int = 0, residency: str = ""):
         if plan.engine != "serve_pool":
             raise ValueError(f"ServeEngine needs a serve_pool plan, got "
                              f"{plan.engine!r}")
@@ -73,6 +73,11 @@ class ServeEngine:
         self.max_len = int(plan.get("max_len"))
         self.enc_len = int(plan.get("enc_len", 0))
         self.prefill_budget = prefill_budget
+        # boundary-cache residency policy for the budget-chunked prefill
+        # plans (recorded on every per-prompt plan; the jitted prefill
+        # executes cfg-level remat, so this is policy bookkeeping — the
+        # same contract as the LM train path)
+        self.prefill_residency = residency
         self.mesh = None
         if plan.mesh is not None and plan.mesh.n_devices > 1:
             # replicate params over the plan mesh; batched decode then
@@ -99,9 +104,12 @@ class ServeEngine:
     # prefill (one request, budget-chunked)
     # ------------------------------------------------------------------
     def prefill_plan(self, prompt_len: int) -> ExecutionPlan:
-        """Sequence-axis plan for one prompt under the prefill budget."""
-        return Planner.for_model(self.cfg, 1, prompt_len,
-                                 budget=self.prefill_budget)
+        """Sequence-axis plan for one prompt under the prefill budget
+        (carries the pool's prefill residency policy, if any)."""
+        from repro.exec.plan import ResidencySpec
+        return Planner.for_model(
+            self.cfg, 1, prompt_len, budget=self.prefill_budget,
+            residency=ResidencySpec.parse(self.prefill_residency))
 
     def _prefill_fn(self, prompt_len: int, n_chunks: int):
         key = (prompt_len, n_chunks)

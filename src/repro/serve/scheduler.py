@@ -199,13 +199,16 @@ class Scheduler:
 def serve(params, cfg, requests: Sequence[Request], *,
           budget: int = 0, n_slots: int = 0, max_len: int = 0,
           enc_len: int = 0, prefill_budget: int = 0,
-          mode: str = "continuous", mesh=None,
+          mode: str = "continuous", mesh=None, residency: str = "",
           walltime_fn: Optional[Callable[[], float]] = None):
     """One-call serving loop: plan the pool, build engine + pool +
     scheduler, run to completion.  Returns (report, plan).
 
     ``mesh=`` (a :class:`~repro.exec.plan.MeshSpec`) makes the budget
-    per-device and shards the decode-slot pool across the data axis."""
+    per-device and shards the decode-slot pool across the data axis.
+    ``residency=`` ("host"/"recompute") is recorded on every prompt's
+    budget-chunked prefill plan (the boundary-cache policy the prefill
+    path would execute under a registry-engine prefill)."""
     from repro.exec.planner import Planner
     if not max_len:
         need = max(r.prompt_len + r.max_new_tokens for r in requests)
@@ -220,7 +223,8 @@ def serve(params, cfg, requests: Sequence[Request], *,
         # a request's chunked prefill runs unsharded on one device, so it
         # must fit the PER-DEVICE slice of the budget, like everything else
         prefill_budget //= max(1, mesh.batch_extent)
-    engine = ServeEngine(params, cfg, plan, prefill_budget=prefill_budget)
+    engine = ServeEngine(params, cfg, plan, prefill_budget=prefill_budget,
+                         residency=residency)
     pool = CachePool(cfg, plan)
     report = Scheduler(engine, pool, requests, mode=mode,
                        walltime_fn=walltime_fn).run()
