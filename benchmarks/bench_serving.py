@@ -1,20 +1,24 @@
-"""Beyond-paper: continuous batching vs the old static-batch serving path
-at mixed prompt lengths, same byte budget — throughput (tok/s) and p50/p95
-per-request latency.
+"""Beyond-paper serving benchmarks, three LR-CNN budget stories:
 
-The LR-CNN angle: both paths run the identical kernels and the identical
-decode-slot pool (the budget); the only difference is the scheduler
-refilling freed rows (continuous) vs draining the whole batch (static) —
-so any win is pure budget-utilisation, the Fig. 9/10 shape transplanted to
-serving.
+1. continuous batching vs the old static-batch path at mixed prompt
+   lengths, same byte budget — pure budget-utilisation (Fig. 9/10
+   transplanted to serving);
+2. paged vs contiguous decode cache at a FIXED byte budget — how many
+   concurrent requests the same bytes admit when they buy avg-length
+   page shares instead of max_len worst cases (the PR 6 acceptance
+   number);
+3. p50/p95 latency + SLO attainment under bursty Poisson traffic — what
+   the paged capacity win does to tail latency when arrivals clump.
 
-Standalone run prints the repo's BENCH JSON lines:
+Standalone run prints the repo's BENCH JSON lines and writes them to
+``bench_serving.json`` at the repo root (the bench trajectory):
   PYTHONPATH=src python -m benchmarks.bench_serving
 """
 
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import List
 
@@ -23,7 +27,8 @@ import jax
 from repro.configs import get_reduced
 from repro.exec import Planner
 from repro.models.lm import model as LM
-from repro.serve import CachePool, Scheduler, ServeEngine, make_requests
+from repro.serve import SLO, Scheduler, ServeEngine, make_pool, \
+    make_requests, serve
 from repro.serve.scheduler import percentile
 
 N_REQUESTS = 16
@@ -36,7 +41,7 @@ REPS = 3                     # median-of-3 per mode (common.time_fn idiom)
 def _run_mode(engine, cfg, plan, reqs, mode: str) -> dict:
     # fresh pool bookkeeping per run; the engine (and with it every
     # compiled prefill/decode function) is shared across modes
-    pool = CachePool(cfg, plan)
+    pool = make_pool(cfg, plan)
     t0 = time.perf_counter()
     report = Scheduler(engine, pool, reqs, mode=mode,
                        walltime_fn=time.perf_counter).run()
@@ -53,6 +58,76 @@ def _run_mode(engine, cfg, plan, reqs, mode: str) -> dict:
         "p50_ms": round(percentile(lat, 0.50), 1),
         "p95_ms": round(percentile(lat, 0.95), 1),
     }
+
+
+def _bench_paged_vs_contiguous(params, cfg) -> List[dict]:
+    """Fixed byte budget, mixed lengths: slot count and realised
+    concurrency (max_active) for contiguous vs paged vs quantised pools,
+    same requests, same kernels."""
+    reqs = make_requests(N_REQUESTS, cfg.vocab, seed=0,
+                         prompt_len=PROMPT_LENS, max_new_tokens=GEN)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in reqs)
+    budget = N_SLOTS * Planner.decode_slot_bytes(cfg, max_len)
+    rows = []
+    results = {}
+    for kind in ("full", "paged_kv", "quant_kv"):
+        rep, plan = serve(params, cfg, reqs, budget=budget,
+                          cache_kind=kind, page_size=16)
+        lat = rep.latency_ticks()
+        results[kind] = (rep, plan)
+        rows.append({
+            "name": f"serving/qwen4b_fixed_budget/{kind}",
+            "budget_bytes": budget,
+            "slots": plan.n_rows,
+            "max_active": rep.max_active,
+            "preemptions": rep.n_preempted,
+            "generated": rep.total_generated,
+            "ticks": rep.total_ticks,
+            "p50_latency_ticks": round(percentile(lat, 0.50), 2),
+            "p95_latency_ticks": round(percentile(lat, 0.95), 2),
+        })
+    full_plan = results["full"][1]
+    paged_rep, paged_plan = results["paged_kv"]
+    rows.append({
+        "name": "serving/qwen4b_fixed_budget/paged_vs_contiguous",
+        "slot_ratio": round(paged_plan.n_rows / max(1, full_plan.n_rows), 3),
+        "max_active_ratio": round(paged_rep.max_active
+                                  / max(1, results["full"][0].max_active),
+                                  3),
+    })
+    return rows
+
+
+def _bench_bursty_slo(params, cfg) -> List[dict]:
+    """Bursty Poisson arrivals against p50/p95 latency SLOs: contiguous
+    vs paged at the same budget — the capacity win shows up as tail
+    latency and attainment."""
+    reqs = make_requests(N_REQUESTS, cfg.vocab, seed=1, traffic="bursty",
+                         prompt_len=PROMPT_LENS, max_new_tokens=GEN,
+                         mean_interarrival=2.0, burst_size=4)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in reqs)
+    budget = N_SLOTS * Planner.decode_slot_bytes(cfg, max_len)
+    slo = SLO(p50_latency=60.0, p95_latency=150.0)
+    rows = []
+    for kind in ("full", "paged_kv"):
+        rep, plan = serve(params, cfg, reqs, budget=budget,
+                          cache_kind=kind, page_size=16,
+                          preemptible_prefill=True, slo=slo)
+        s = rep.summary()
+        rows.append({
+            "name": f"serving/qwen4b_bursty_slo/{kind}",
+            "budget_bytes": budget,
+            "slots": plan.n_rows,
+            "max_active": s["max_active"],
+            "preemptions": s["preemptions"],
+            "p50_latency_ticks": s["p50_latency_ticks"],
+            "p95_latency_ticks": s["p95_latency_ticks"],
+            "p50_ttft_ticks": s["p50_ttft_ticks"],
+            "p95_ttft_ticks": s["p95_ttft_ticks"],
+            "slo_attainment": s["slo"]["attainment"],
+            "slo_met": all(s["slo"]["met"].values()),
+        })
+    return rows
 
 
 def run() -> List[dict]:
@@ -84,12 +159,22 @@ def run() -> List[dict]:
                  "decode_step_ratio": round(static["decode_steps"]
                                             / max(cont["decode_steps"], 1),
                                             3)})
+    rows += _bench_paged_vs_contiguous(params, cfg)
+    rows += _bench_bursty_slo(params, cfg)
     return rows
 
 
 def main() -> None:
-    for row in run():
+    rows = run()
+    for row in rows:
         print("BENCH " + json.dumps(row, sort_keys=True))
+    # the bench trajectory: one JSON file at the repo root, rewritten per
+    # run, so the numbers travel with the commit that produced them
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "bench_serving.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

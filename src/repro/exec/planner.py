@@ -228,7 +228,15 @@ def _kernel_fallback(plan: ExecutionPlan, spec: KernelSpec,
 #: per-layer-kind decode cache byte estimators: fn(cfg, max_len, db) -> bytes
 #: for ONE slot (one batch element).  repro.serve.cache_pool registers the
 #: matching init mechanism; a new cache kind plugs into serving by adding an
-#: entry to both (see ROADMAP "Serving subsystem").
+#: entry to both (see ROADMAP "Paged + quantised serving").
+#:
+#: Keys come in two forms: a bare layer kind ("attn", "mamba", ...) prices
+#: that layer's cache under the default contiguous ("full") pool, and a
+#: qualified "<cache_kind>/<layer_kind>" key ("paged_kv/attn",
+#: "quant_kv/attn") overrides it under an alternative pool cache kind —
+#: lookups try the qualified key first and fall back to the bare one, so a
+#: pool kind only overrides the layers it actually changes (ring-window
+#: 'local' caches and SSM states stay slot-resident under paging).
 SERVE_CACHE_BYTES: Dict[str, Callable] = {}
 
 
@@ -280,74 +288,218 @@ register_cache_bytes(
     "slstm", lambda cfg, max_len, db: 4 * 4 * cfg.d_model)  # c,n,h,m fp32
 
 
+# -- paged_kv: full-attention K/V rows live in the shared page pool, so a
+#    slot's *resident* decode state shrinks to the int32 "pos" scalar (the
+#    block-table row is host-side numpy bookkeeping, not device bytes);
+#    per-page bytes are priced separately by Planner.page_bytes
+for _k in ("attn", "global", "shared_attn", "moe"):
+    register_cache_bytes(f"paged_kv/{_k}", lambda cfg, max_len, db: 4)
+
+
+def _quant_kv_bytes(cfg, max_len, db):
+    # int8 k + v codes, one fp32 scale per (position, kv-head) block, + pos
+    rows = max_len * cfg.n_kv_heads
+    return 2 * rows * cfg.head_dim + 2 * rows * 4 + 4
+
+
+for _k in ("attn", "global", "shared_attn", "moe"):
+    register_cache_bytes(f"quant_kv/{_k}", _quant_kv_bytes)
+
+
+def serve_cache_kinds() -> Tuple[str, ...]:
+    """Registered pool cache kinds: "full" plus every qualified prefix —
+    a third-party kind becomes known the moment it registers a
+    "<kind>/<layer>" estimator."""
+    kinds = {"full"}
+    kinds.update(k.split("/", 1)[0] for k in SERVE_CACHE_BYTES if "/" in k)
+    return tuple(sorted(kinds))
+
+
 class _ServePlannerMixin:
     """decode_slot_bytes / for_serve, mixed into :class:`Planner` below
     (kept separate only to keep the CNN solver block readable)."""
 
     @staticmethod
-    def decode_slot_bytes(cfg, max_len: int, enc_len: int = 0) -> int:
+    def decode_slot_bytes(cfg, max_len: int, enc_len: int = 0,
+                          cache_kind: str = "full") -> int:
         """Decode-state bytes ONE request pins for its whole lifetime: KV
         rows for attention kinds (ring-capped for 'local'), recurrent state
         for SSM kinds, + cross-attention K/V for enc-dec.  This is the
         Eq. 7 accounting applied to serving — decode slots are the rows,
-        and the slot count is the granularity N the budget buys."""
+        and the slot count is the granularity N the budget buys.
+
+        ``cache_kind`` routes each layer kind through its qualified
+        "<cache_kind>/<layer_kind>" estimator when one is registered
+        (falling back to the contiguous estimator otherwise), so under
+        ``"paged_kv"`` this is the slot's *resident* bytes — the shared
+        page pool is priced separately via :meth:`page_bytes`."""
         db = 2 if cfg.dtype == "bfloat16" else 4
         if cfg.family == "encdec":
+            if cache_kind != "full":
+                raise ValueError(
+                    f"cache kind {cache_kind!r} does not support enc-dec "
+                    f"pools (cross-attention caches are precomputed "
+                    f"whole); use cache_kind='full'")
             # decoder layers: self-attn KV + precomputed cross K/V (no pos)
             cross = 2 * enc_len * cfg.n_kv_heads * cfg.head_dim * db
             return cfg.n_layers * (_kv_bytes(cfg, max_len, db) + cross)
         total = 0
         for kind in cfg.layer_kinds():
-            try:
-                fn = SERVE_CACHE_BYTES[kind]
-            except KeyError:
-                raise KeyError(
-                    f"no decode-cache byte estimator for layer kind "
-                    f"{kind!r}; register one with "
-                    f"repro.exec.planner.register_cache_bytes") from None
+            fn = SERVE_CACHE_BYTES.get(f"{cache_kind}/{kind}") \
+                if cache_kind != "full" else None
+            if fn is None:
+                try:
+                    fn = SERVE_CACHE_BYTES[kind]
+                except KeyError:
+                    raise KeyError(
+                        f"no decode-cache byte estimator for layer kind "
+                        f"{kind!r}; register one with "
+                        f"repro.exec.planner.register_cache_bytes") from None
             total += fn(cfg, max_len, db)
         return total
+
+    @staticmethod
+    def page_bytes(cfg, page_size: int) -> int:
+        """Marginal device bytes ONE page adds to a ``paged_kv`` pool: a
+        (page_size, kv_heads, head_dim) K and V tile per paged layer —
+        layers whose kind has a "paged_kv/<kind>" estimator registered;
+        ring-window and state kinds stay slot-resident and contribute
+        nothing.  Exact against ``jax.eval_shape`` of the pool init (the
+        ``decode_slot_bytes`` contract, per page)."""
+        db = 2 if cfg.dtype == "bfloat16" else 4
+        n = sum(1 for kind in cfg.layer_kinds()
+                if f"paged_kv/{kind}" in SERVE_CACHE_BYTES)
+        return n * 2 * page_size * cfg.n_kv_heads * cfg.head_dim * db
 
     @classmethod
     def for_serve(cls, cfg, max_len: int, budget: int = 0,
                   enc_len: int = 0, n_slots: int = 0,
-                  n_max: int = 256, mesh=None) -> ExecutionPlan:
+                  n_max: int = 256, mesh=None, cache_kind: str = "full",
+                  page_size: int = 16, avg_len: int = 0, n_pages: int = 0,
+                  decode_residency=None,
+                  decode_batch: int = 0) -> ExecutionPlan:
         """Size the decode cache pool: the largest slot count whose pinned
         decode state fits ``budget`` (or an explicit ``n_slots``).  Returns
         an ``engine="serve_pool"`` plan; ``extras`` carry the pool geometry
-        the mechanism side (repro.serve.cache_pool.CachePool) honours
-        verbatim.
+        the mechanism side (repro.serve.cache_pool) honours verbatim.
+
+        ``cache_kind`` picks the pool's storage layout (any kind from
+        :func:`serve_cache_kinds`): ``"full"`` is the contiguous
+        worst-case pool, ``"quant_kv"`` shrinks each slot to int8 codes +
+        scales, and ``"paged_kv"`` splits a slot into tiny resident state
+        plus pages from a shared pool — the budget then buys
+        ``avg_len``-sized page shares (ceil(avg_len / page_size) pages per
+        expected request) instead of ``max_len`` worst cases, which is
+        exactly why a paged pool admits more concurrent requests at mixed
+        lengths.  ``n_pages`` pins the page-pool size explicitly
+        (default: worst case under pinned ``n_slots``, the budget
+        remainder otherwise).
+
+        ``decode_residency`` (a :class:`ResidencySpec` or its string form)
+        extends the residency vocabulary to decode state: under ``"host"``
+        the pool buffers live in host memory and only the hot decode
+        cohort — ``decode_batch`` slots, fetched one tick ahead — is
+        device-resident, so the device estimate becomes the transit
+        working set (``(1 + prefetch_depth) * decode_batch`` dense slots)
+        and the budget stops bounding the slot count (host bytes are
+        recorded under the ``host_bytes`` extra).
 
         With ``mesh=`` decode slots shard across the data axis: the global
         ``budget`` is divided by the batch extent to get each device's
         slice, each device pins the ``slots_per_device`` slots that slice
         buys, and the global slot count is their product (rounded up to a
         multiple of the extent when ``n_slots`` is pinned explicitly, so
-        the pool's slot axis always divides evenly)."""
-        slot = cls.decode_slot_bytes(cfg, max_len, enc_len)
+        the pool's slot axis always divides evenly).  Paged/quant pools
+        and decode-state residency are single-host for now."""
+        known = serve_cache_kinds()
+        if cache_kind not in known:
+            raise KeyError(
+                f"unknown pool cache kind {cache_kind!r}; known: "
+                f"{list(known)} — register a '<kind>/<layer>' estimator "
+                f"with repro.exec.planner.register_cache_bytes and the "
+                f"matching init/pool with repro.serve.cache_pool")
+        if isinstance(decode_residency, str):
+            decode_residency = ResidencySpec.parse(decode_residency)
+        if decode_residency is not None \
+                and decode_residency.default == "recompute":
+            raise ValueError("decode state cannot be recomputed (tokens "
+                             "depend on it); use 'host' or 'device' "
+                             "decode residency")
         shards = mesh.batch_extent if mesh is not None else 1
-        if not n_slots:
-            if budget:
-                per_dev = max(1, min(max(1, n_max // shards),
-                                     (budget // shards) // slot))
+        if shards > 1 and (cache_kind != "full"
+                           or decode_residency is not None):
+            raise ValueError(
+                f"cache kind {cache_kind!r} / decode-state residency "
+                f"pools are single-host; drop mesh= or use the default "
+                f"contiguous kind")
+        host = decode_residency is not None \
+            and decode_residency.default == "host"
+        slot = cls.decode_slot_bytes(cfg, max_len, enc_len,
+                                     cache_kind=cache_kind)
+        dev_budget = budget // shards
+        extras = {"max_len": max_len, "slot_bytes": slot,
+                  "cache_kind": cache_kind}
+        if decode_batch:
+            extras["decode_batch"] = int(decode_batch)
+        if cache_kind == "paged_kv":
+            pb = cls.page_bytes(cfg, page_size)
+            if not pb:
+                raise ValueError(
+                    f"{cfg.name}: no paged-eligible layer kinds "
+                    f"({sorted(set(cfg.layer_kinds()))}) — every cache is "
+                    f"slot-resident, so paging buys nothing; use "
+                    f"cache_kind='full'")
+            mp = -(-max_len // page_size)
+            avg = int(avg_len) or max_len
+            app = max(1, -(-avg // page_size))  # expected pages per request
+            if n_slots:
+                per_dev = n_slots
+                n_pages = n_pages or n_slots * mp    # worst case: no sharing
+            elif budget:
+                per_req = slot + app * pb
+                per_dev = max(1, min(n_max, dev_budget // per_req))
+                n_pages = n_pages or max(per_dev * app,
+                                         (dev_budget - per_dev * slot) // pb)
             else:
                 per_dev = 1
-            n_slots = per_dev * shards
+                n_pages = n_pages or mp
+            n_pages = max(1, int(n_pages))
+            per_dev_est = per_dev * slot + n_pages * pb
+            n_slots = per_dev * shards               # shards == 1 here
+            extras.update(page_size=int(page_size), n_pages=n_pages,
+                          page_bytes=pb, avg_len=avg)
         else:
-            per_dev = -(-n_slots // shards)       # ceil: even slot sharding
-            n_slots = per_dev * shards
-        est = n_slots * slot
-        extras = {"max_len": max_len, "slot_bytes": slot,
-                  "slots_per_device": per_dev}
+            if not n_slots:
+                if budget:
+                    per_dev = max(1, min(max(1, n_max // shards),
+                                         dev_budget // slot))
+                else:
+                    per_dev = 1
+                n_slots = per_dev * shards
+            else:
+                per_dev = -(-n_slots // shards)   # ceil: even slot sharding
+                n_slots = per_dev * shards
+            per_dev_est = per_dev * slot
+        if host:
+            # the pool lives in host memory; the device holds the hot
+            # cohort's dense transit view (current fetch + prefetch_depth
+            # in flight), so that is what the budget must cover
+            dense_slot = cls.decode_slot_bytes(cfg, max_len, enc_len)
+            hot = int(decode_batch) or per_dev
+            extras["host_bytes"] = per_dev_est
+            per_dev_est = min(per_dev, hot * (
+                1 + decode_residency.prefetch_depth)) * dense_slot
+        extras["slots_per_device"] = per_dev
         if cfg.family == "encdec":
             extras["enc_len"] = enc_len
         return ExecutionPlan(
             engine="serve_pool", n_rows=n_slots, in_shape=None,
             batch=n_slots, dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
-            est_bytes=est, est_bytes_per_device=per_dev * slot,
+            est_bytes=per_dev_est * shards, est_bytes_per_device=per_dev_est,
             budget=budget,
-            feasible=(budget == 0 or per_dev * slot < budget // shards),
-            mesh=mesh, extras=tuple(extras.items()))
+            feasible=(budget == 0 or per_dev_est < dev_budget),
+            mesh=mesh, residency=decode_residency,
+            extras=tuple(extras.items()))
 
 
 class Planner(_ServePlannerMixin):

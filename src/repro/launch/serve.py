@@ -14,6 +14,8 @@ a static batch of identical-length prompts arriving together).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 
@@ -34,9 +36,12 @@ def main():
     ap.add_argument("--requests", type=int, default=0,
                     help="number of requests (default: --batch)")
     ap.add_argument("--traffic", default="static",
-                    choices=["static", "poisson"])
+                    choices=["static", "poisson", "bursty"])
     ap.add_argument("--mean-interarrival", type=float, default=2.0,
-                    help="poisson mean inter-arrival, in scheduler ticks")
+                    help="poisson/bursty mean inter-arrival, in scheduler "
+                         "ticks")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="bursty traffic: mean requests per arrival clump")
     ap.add_argument("--mixed-prompts", action="store_true",
                     help="sample prompt lengths from {P/4, P/2, P} instead "
                          "of a fixed --prompt-len P")
@@ -51,6 +56,33 @@ def main():
                     choices=["", "device", "host", "recompute"],
                     help="boundary-cache residency policy recorded on "
                          "each prompt's budget-chunked prefill plan")
+    ap.add_argument("--cache-kind", default="full",
+                    choices=["full", "paged_kv", "quant_kv"],
+                    help="decode cache pool layout: contiguous worst-case "
+                         "slots, paged KV behind a block table, or int8 "
+                         "quantised KV")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page (paged_kv)")
+    ap.add_argument("--decode-residency", default="",
+                    choices=["", "device", "host"],
+                    help="decode-state residency: 'host' keeps pool "
+                         "buffers in host memory and fetches the decode "
+                         "cohort one tick ahead")
+    ap.add_argument("--decode-batch", type=int, default=0,
+                    help="cap the per-tick decode cohort (0 = whole pool)")
+    ap.add_argument("--preemptible-prefill", action="store_true",
+                    help="chunked prefill spends one tick per row chunk "
+                         "and can be evicted by higher-priority arrivals")
+    ap.add_argument("--priority-levels", type=int, default=1,
+                    help="sample request priorities from [0, levels)")
+    ap.add_argument("--slo-p50", type=float, default=0.0,
+                    help="p50 latency SLO target, in scheduler ticks")
+    ap.add_argument("--slo-p95", type=float, default=0.0,
+                    help="p95 latency SLO target, in scheduler ticks")
+    ap.add_argument("--out", default="",
+                    help="write a serve artefact JSON (args + resolved "
+                         "pool plan + cache kind/decode residency + "
+                         "summary) to this directory")
     args = ap.parse_args()
 
     import jax
@@ -59,7 +91,7 @@ def main():
     from repro.exec import MeshSpec
     from repro.models.lm import encdec as ED
     from repro.models.lm import model as LM
-    from repro.serve import make_requests, serve
+    from repro.serve import SLO, make_requests, serve
 
     mesh_spec = MeshSpec.parse(args.mesh) if args.mesh else None
     cfg = get_reduced(args.arch) if args.preset == "reduced" \
@@ -83,34 +115,52 @@ def main():
         feature = {"frontend": "audio", "n_feature_tokens": enc_len,
                    "feature_dim": cfg.d_model}
 
+    priority = 0 if args.priority_levels <= 1 \
+        else (0, args.priority_levels - 1)
     requests = make_requests(
         n_requests, cfg.vocab, seed=args.seed, traffic=args.traffic,
         prompt_len=prompt_len, max_new_tokens=args.gen,
         mean_interarrival=args.mean_interarrival,
-        temperature=args.temperature, top_k=args.top_k, **feature)
+        temperature=args.temperature, top_k=args.top_k,
+        priority=priority, burst_size=args.burst, **feature)
 
     key = jax.random.PRNGKey(args.seed)
     params = ED.init_encdec(key, cfg) if cfg.family == "encdec" \
         else LM.init_lm(key, cfg)
+
+    slo = None
+    if args.slo_p50 or args.slo_p95:
+        slo = SLO(p50_latency=args.slo_p50, p95_latency=args.slo_p95)
 
     t0 = time.perf_counter()
     report, plan = serve(params, cfg, requests, budget=budget,
                          n_slots=0 if budget else args.batch,
                          enc_len=enc_len, prefill_budget=budget,
                          mesh=mesh_spec, residency=args.residency,
-                         walltime_fn=time.perf_counter)
+                         cache_kind=args.cache_kind,
+                         page_size=args.page_size,
+                         decode_residency=args.decode_residency,
+                         decode_batch=args.decode_batch,
+                         preemptible_prefill=args.preemptible_prefill,
+                         slo=slo, walltime_fn=time.perf_counter)
     wall = time.perf_counter() - t0
 
     print("pool plan:", plan.describe())
     s = report.summary()
     print(f"arch={cfg.name} requests={s['requests']} traffic={args.traffic} "
-          f"slots={plan.n_rows}")
+          f"cache_kind={args.cache_kind} slots={plan.n_rows}")
     print(f"generated {s['generated_tokens']} tokens in {wall:.2f}s "
           f"({s['generated_tokens'] / max(wall, 1e-9):.1f} tok/s wall); "
           f"{s['prefills']} prefills, {s['decode_steps']} decode steps, "
-          f"max_active={s['max_active']}")
+          f"max_active={s['max_active']}, "
+          f"preemptions={s['preemptions']}")
     print(f"latency ticks: p50={s['p50_latency_ticks']:.1f} "
-          f"p95={s['p95_latency_ticks']:.1f}")
+          f"p95={s['p95_latency_ticks']:.1f} "
+          f"ttft p50={s['p50_ttft_ticks']:.1f} "
+          f"p95={s['p95_ttft_ticks']:.1f}")
+    if "slo" in s:
+        print(f"SLO: met={s['slo']['met']} "
+              f"attainment={s['slo']['attainment']}")
     for st in report.states[:4]:
         print(f"  request {st.rid}: prompt={st.request.prompt_len} "
               f"slot={st.slot} chunks={st.prefill_chunks} "
@@ -119,6 +169,29 @@ def main():
     # raises FloatingPointError on non-finite logits, so reaching this
     # point means every generated token came from finite logits
     assert all(st.done for st in report.states)
+    if args.out:
+        # the serve artefact fully pins how the run executed — the pool
+        # plan (cache kind, page geometry, decode residency included) the
+        # same way dry-run artefacts pin kernel policy
+        os.makedirs(args.out, exist_ok=True)
+        rec = {
+            "arch": cfg.name, "preset": args.preset,
+            "traffic": args.traffic, "requests": n_requests,
+            "budget_bytes": budget, "mesh": args.mesh,
+            "cache_kind": args.cache_kind,
+            "prefill_residency": args.residency,
+            "decode_residency": (plan.residency.describe()
+                                 if plan.residency is not None else ""),
+            "exec_plan": plan.to_dict(),
+            "exec_plan_per_device": plan.per_device().to_dict(),
+            "slo": s.get("slo"),
+            "summary": s,
+        }
+        tag = f"{cfg.name}_{args.cache_kind}_{args.traffic}"
+        path = os.path.join(args.out, tag + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"artefact: {path}")
     print("serve OK")
 
 

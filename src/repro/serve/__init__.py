@@ -22,12 +22,18 @@ the jitted per-family step functions.  Typical use::
     print(plan.describe(), report.summary())
 """
 
-from repro.serve.cache_pool import CachePool, register_cache_init
+from repro.serve.cache_pool import (
+    CachePool, PagedCachePool, QuantCachePool, make_pool,
+    register_cache_init, register_pool_kind,
+)
 from repro.serve.engine import ServeEngine
+from repro.serve.pages import PageGeometry, PageManager
 from repro.serve.request import Phase, Request, RequestState, make_requests
-from repro.serve.scheduler import Scheduler, ServeReport, serve
+from repro.serve.scheduler import SLO, Scheduler, ServeReport, serve
 
 __all__ = [
-    "CachePool", "register_cache_init", "ServeEngine", "Phase", "Request",
-    "RequestState", "make_requests", "Scheduler", "ServeReport", "serve",
+    "CachePool", "PagedCachePool", "QuantCachePool", "make_pool",
+    "register_cache_init", "register_pool_kind", "ServeEngine",
+    "PageGeometry", "PageManager", "Phase", "Request", "RequestState",
+    "make_requests", "SLO", "Scheduler", "ServeReport", "serve",
 ]

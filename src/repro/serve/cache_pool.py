@@ -1,33 +1,65 @@
-"""Fixed-slot decode cache pool — the serving instance of LR-CNN's fixed
-memory budget reused across row partitions.
+"""Decode cache pools — the serving instance of LR-CNN's fixed memory
+budget reused across row partitions.
 
-The pool allocates ONE persistent buffer set whose batch axis is the slot
+A pool allocates ONE persistent buffer set whose batch axis is the slot
 axis; requests borrow a slot for their lifetime (prefill writes the slot,
 decode updates it in place, eviction frees it for the next request).  Pool
 capacity is policy, not mechanism: a ``serve_pool`` :class:`ExecutionPlan`
-from :meth:`repro.exec.planner.Planner.for_serve` pins the slot count the
-byte budget buys, and the pool honours it verbatim.
+from :meth:`repro.exec.planner.Planner.for_serve` pins the slot count (and
+page-pool geometry) the byte budget buys, and the pool honours it
+verbatim.
 
-Cache *kinds* are a registry (mirroring the engine registry): the policy
-side registers a byte estimator with
+Three pool *cache kinds* ship, all presenting the same surface to the
+scheduler (``decode_view`` -> decode -> ``absorb``):
+
+* ``full`` (:class:`CachePool`) — the contiguous worst-case pool; storage
+  IS the dense view the decode kernels consume.
+* ``paged_kv`` (:class:`PagedCachePool`) — full-attention K/V rows live in
+  a shared page pool behind a per-slot block table
+  (:mod:`repro.serve.pages`); ``decode_view`` gathers the dense view,
+  ``absorb`` scatters it back, so decode stays bit-identical to the
+  contiguous pool while eviction returns pages for other requests.
+* ``quant_kv`` (:class:`QuantCachePool`) — K/V stored as int8 codes plus
+  fp32 per-(position, kv-head) scales; ``decode_view`` dequantises,
+  ``absorb`` quantises ONLY each slot's newly written position (old codes
+  are never re-quantised, so stored history is bit-stable).
+
+Cache kinds are registries (mirroring the engine registry): the policy
+side registers byte estimators with
 :func:`repro.exec.planner.register_cache_bytes`, the mechanism side
-registers the matching init here with :func:`register_cache_init`.  The
-built-in kinds reuse the model stack's cache constructors — full and ring
-KV caches (:func:`repro.models.lm.attention.init_cache`) and the SSM /
-xLSTM state shapes.
+registers matching inits here with :func:`register_cache_init` (a
+qualified ``"<cache_kind>/<layer_kind>"`` key overrides a layer's cache
+under that pool kind) and the pool class with
+:func:`register_pool_kind`; :func:`make_pool` dispatches on the plan's
+``cache_kind`` extra.
+
+Decode-state residency: a ``serve_pool`` plan whose ``residency`` spec
+says ``host`` keeps the pool buffers in host memory (``pinned_host`` on
+TPU; a structural no-op on CPU hosts, same contract as
+:mod:`repro.exec.rowprog`), fetches the hot decode cohort's dense view to
+the device per tick, and serves :meth:`CachePool.prefetch` stashes issued
+one tick ahead by the scheduler.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Type
 
 import jax
 import jax.numpy as jnp
 
 from repro.exec.plan import ExecutionPlan
+from repro.exec.rowprog import to_device, to_host
+from repro.serve.pages import (
+    PageGeometry, PageManager, dequantise, gather_pages, quantise,
+    scatter_pages,
+)
 
-#: kind -> init(cfg, batch, max_len, dtype) -> cache pytree for one layer.
+#: kind -> init fn.  Bare layer kinds: init(cfg, batch, max_len, dtype).
+#: Qualified "<cache_kind>/<layer_kind>" kinds additionally receive the
+#: pool's PageGeometry (None for non-paged kinds):
+#: init(cfg, batch, max_len, dtype, geom).
 CACHE_INITS: Dict[str, Callable] = {}
 
 
@@ -56,11 +88,55 @@ for _k in ("attn", "global", "shared_attn", "moe", "local", "mamba",
     register_cache_init(_k, _block_cache_init(_k))
 
 
-def init_pool_caches(cfg, n_slots: int, max_len: int, enc_len: int = 0):
+def _paged_attn_init(cfg, batch, max_len, dtype, geom: PageGeometry):
+    """paged_kv storage for a full-attention layer: K/V page pools shared
+    across slots + the per-slot resident pos scalar.  Key names mirror the
+    dense cache ({k, v, pos, ring}) so the generic structural slot write
+    lines up leaf-for-leaf (page leaves are slot-shared and skip)."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((geom.n_pages, geom.page_size, kv, hd), dtype),
+            "v": jnp.zeros((geom.n_pages, geom.page_size, kv, hd), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "ring": jnp.array(False)}
+
+
+def _quant_attn_init(cfg, batch, max_len, dtype, geom):
+    """quant_kv storage: int8 K/V codes + fp32 per-(position, kv-head)
+    scales (the scale-per-block layout :func:`repro.serve.pages.quantise`
+    emits)."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k_q": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            "k_s": jnp.zeros((batch, max_len, kv), jnp.float32),
+            "v_q": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            "v_s": jnp.zeros((batch, max_len, kv), jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "ring": jnp.array(False)}
+
+
+for _k in ("attn", "global", "shared_attn", "moe"):
+    register_cache_init(f"paged_kv/{_k}", _paged_attn_init)
+    register_cache_init(f"quant_kv/{_k}", _quant_attn_init)
+
+
+def _kind_init(cache_kind: str, kind: str) -> Optional[Callable]:
+    """The qualified init for ``kind`` under ``cache_kind`` (None when the
+    layer keeps its dense slot-resident cache under this pool kind)."""
+    if cache_kind == "full":
+        return None
+    return CACHE_INITS.get(f"{cache_kind}/{kind}")
+
+
+def init_pool_caches(cfg, n_slots: int, max_len: int, enc_len: int = 0,
+                     cache_kind: str = "full",
+                     geom: Optional[PageGeometry] = None):
     """Pool-shaped caches: batch axis = slot axis.  Same structure the
-    model's prefill emits, so slot writes are a pure tree-zip."""
+    model's prefill emits (for layers a ``cache_kind`` overrides, the
+    override's structure), so slot writes are a pure tree-zip."""
     dtype = jnp.dtype(cfg.dtype)
     if cfg.family == "encdec":
+        if cache_kind != "full":
+            raise ValueError(f"cache kind {cache_kind!r} does not support "
+                             f"enc-dec pools; use cache_kind='full'")
         from repro.models.lm.encdec import encdec_init_caches
         return encdec_init_caches(cfg, n_slots, max_len, enc_len)
     # mirror of models.lm.blocks.init_stack_caches, routed through the
@@ -69,19 +145,26 @@ def init_pool_caches(cfg, n_slots: int, max_len: int, enc_len: int = 0):
     for pat, count in cfg.scan_segments():
         group = []
         for kind in pat:
-            c = CACHE_INITS[kind](cfg, n_slots, max_len, dtype)
+            fn = _kind_init(cache_kind, kind)
+            if fn is not None:
+                c = fn(cfg, n_slots, max_len, dtype, geom)
+            else:
+                c = CACHE_INITS[kind](cfg, n_slots, max_len, dtype)
             group.append(jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), c))
         caches.append(tuple(group))
     return caches
 
 
-def _slot_axes(cfg, max_len: int, enc_len: int) -> List[int]:
+def _slot_axes(cfg, max_len: int, enc_len: int, cache_kind: str = "full",
+               geom: Optional[PageGeometry] = None) -> List[int]:
     """Per-leaf slot-axis indices, found structurally: the axis whose size
-    changes between a 1-slot and a 2-slot pool (-1 for shared leaves such
-    as ring flags, which are per-layer, not per-slot)."""
-    one = jax.eval_shape(lambda: init_pool_caches(cfg, 1, max_len, enc_len))
-    two = jax.eval_shape(lambda: init_pool_caches(cfg, 2, max_len, enc_len))
+    changes between a 1-slot and a 2-slot pool (-1 for shared leaves —
+    ring flags AND page pools, which are per-layer, not per-slot)."""
+    one = jax.eval_shape(lambda: init_pool_caches(cfg, 1, max_len, enc_len,
+                                                  cache_kind, geom))
+    two = jax.eval_shape(lambda: init_pool_caches(cfg, 2, max_len, enc_len,
+                                                  cache_kind, geom))
     axes = []
     for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(two)):
         diff = [i for i, (p, q) in enumerate(zip(a.shape, b.shape)) if p != q]
@@ -103,30 +186,102 @@ def _write_slot(pool, single, slot, *, axes):
     return jax.tree_util.tree_unflatten(td, out)
 
 
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _zero_slot(pool, slot, *, axes):
+    """Deterministically reset one slot's slices (shared leaves — ring
+    flags, page pools — stay): the eviction-path guarantee that a recycled
+    slot can never read a predecessor's stale state."""
+    lp, td = jax.tree_util.tree_flatten(pool)
+    out = []
+    for p, ax in zip(lp, axes):
+        if ax < 0:
+            out.append(p)
+        else:
+            idx = (slice(None),) * ax + (slot,)
+            out.append(p.at[idx].set(0))
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _gather_slots(pool, slots, *, axes):
+    """Subset view: take ``slots`` along each leaf's slot axis (shared
+    leaves pass through whole)."""
+    lp, td = jax.tree_util.tree_flatten(pool)
+    out = [p if ax < 0 else jnp.take(p, slots, axis=ax)
+           for p, ax in zip(lp, axes)]
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _scatter_slots(pool, sub, slots, *, axes):
+    """Inverse of :func:`_gather_slots`: write the subset back."""
+    lp, td = jax.tree_util.tree_flatten(pool)
+    ls = jax.tree.leaves(sub)
+    out = []
+    for p, s, ax in zip(lp, ls, axes):
+        if ax < 0:
+            out.append(s)  # shared leaf: the step's updated copy wins
+        else:
+            idx = (slice(None),) * ax + (slots,)
+            out.append(p.at[idx].set(s))
+    return jax.tree_util.tree_unflatten(td, out)
+
+
 class CachePool:
     """Slot allocator + the pooled cache buffers a ``serve_pool`` plan
     describes.  ``owner[slot]`` is the request id currently pinned there
     (-1 = free); ``history[slot]`` records every request the slot served —
-    the slot-reuse evidence the tests assert on."""
+    the slot-reuse evidence the tests assert on.
+
+    The scheduler drives every pool kind through the same four calls:
+    ``decode_view(slots)`` -> engine decode -> ``absorb(new, slots)``,
+    with ``grow(slot)`` before each decoding slot's step (page-capacity
+    for the incoming token; always True here) and ``prefetch(slots)``
+    issued one tick ahead of the next cohort (a stash served by the next
+    matching ``decode_view`` under host decode residency)."""
+
+    #: the plan ``cache_kind`` extra this class implements
+    kind = "full"
 
     def __init__(self, cfg, plan: ExecutionPlan):
         if plan.engine != "serve_pool":
             raise ValueError(f"CachePool needs a serve_pool plan, got "
                              f"{plan.engine!r}")
+        want = plan.get("cache_kind", "full")
+        if want != self.kind:
+            raise ValueError(f"plan wants cache kind {want!r} but "
+                             f"{type(self).__name__} implements "
+                             f"{self.kind!r}; build pools with make_pool()")
         self.cfg = cfg
         self.plan = plan
         self.n_slots = plan.n_rows
         self.max_len = int(plan.get("max_len"))
         self.enc_len = int(plan.get("enc_len", 0))
+        self._geom = self._geometry()
         self.caches = init_pool_caches(cfg, self.n_slots, self.max_len,
-                                       self.enc_len)
-        self._axes = tuple(_slot_axes(cfg, self.max_len, self.enc_len))
+                                       self.enc_len, self.kind, self._geom)
+        self._axes = tuple(_slot_axes(cfg, self.max_len, self.enc_len,
+                                      self.kind, self._geom))
+        #: slot axes of the DENSE view (== storage axes for the full kind)
+        self._dense_axes = self._axes if self.kind == "full" \
+            else tuple(_slot_axes(cfg, self.max_len, self.enc_len))
         self.mesh = None
         if plan.mesh is not None and plan.mesh.n_devices > 1:
             self._shard_pool()
         self._free = list(range(self.n_slots))
         self.owner = [-1] * self.n_slots
         self.history: List[List[int]] = [[] for _ in range(self.n_slots)]
+        # ---- decode-state residency (plan.residency on serve_pool plans)
+        self._host = plan.residency is not None \
+            and plan.residency.default == "host"
+        self._stash = None        # (cohort slots, device view, full view)
+        self._last_full = None    # full dense view behind a subset view
+        self.prefetch_hits = 0
+        if self._host:
+            self.caches = to_host(self.caches)
+
+    def _geometry(self) -> Optional[PageGeometry]:
+        return None
 
     def _shard_pool(self) -> None:
         """Place the pool buffers with the slot axis sharded over the
@@ -161,9 +316,15 @@ class CachePool:
     def n_active(self) -> int:
         return self.n_slots - len(self._free)
 
-    def acquire(self, rid: int) -> Optional[int]:
+    def can_admit(self, seq_len: int = 0) -> bool:
+        """Would :meth:`acquire` succeed for a ``seq_len``-token prompt?"""
+        return bool(self._free)
+
+    def acquire(self, rid: int, seq_len: int = 0) -> Optional[int]:
         """Lowest free slot, pinned to ``rid``; None when the pool is full
-        (the request stays QUEUED — admission control under the budget)."""
+        (the request stays QUEUED — admission control under the budget).
+        ``seq_len`` is the prompt footprint paged pools pre-allocate pages
+        for (ignored by contiguous pools)."""
         if not self._free:
             return None
         slot = self._free.pop(0)
@@ -172,13 +333,340 @@ class CachePool:
         return slot
 
     def release(self, slot: int) -> None:
+        """Free ``slot`` AND deterministically zero its cache slices (and,
+        in subclasses, its pages) so the next tenant can never read the
+        predecessor's stale KV."""
         if self.owner[slot] < 0:
             raise ValueError(f"slot {slot} is already free")
         self.owner[slot] = -1
         self._free.append(slot)
         self._free.sort()
+        self.caches = _zero_slot(self.caches, jnp.int32(slot),
+                                 axes=self._axes)
+        self._stash = None
+
+    def grow(self, slot: int) -> bool:
+        """Capacity for one more decoded token on ``slot`` (page pools
+        allocate here).  Contiguous pools always have it."""
+        return True
+
+    # ------------------------------------------------------------------
+    # the decode_view / absorb surface
+    # ------------------------------------------------------------------
+    def _dense_view(self):
+        """The whole pool in the dense structure the decode kernels
+        consume.  Storage IS that structure for the full kind."""
+        return self.caches
+
+    def _store(self, dense) -> None:
+        """Absorb a full dense view back into storage (identity layout
+        for the full kind)."""
+        self.caches = dense
+
+    def decode_view(self, slots: Optional[Sequence[int]] = None):
+        """The dense cache tree one decode step consumes: the whole pool
+        (``slots=None``) or the given cohort's subset (slot axis =
+        ``len(slots)``).  Serves a matching :meth:`prefetch` stash first —
+        the one-tick-ahead fetch under host decode residency."""
+        if slots is not None:
+            key = tuple(int(s) for s in slots)
+            if self._stash is not None and self._stash[0] == key:
+                _, sub, full = self._stash
+                self._stash = None
+                self._last_full = full
+                self.prefetch_hits += 1
+                return sub
+        self._stash = None
+        full = self._dense_view()
+        if slots is None:
+            self._last_full = None
+            return to_device(full) if self._host else full
+        self._last_full = full
+        sub = _gather_slots(full, jnp.asarray(list(slots), jnp.int32),
+                            axes=self._dense_axes)
+        return to_device(sub) if self._host else sub
+
+    def _merge_subset(self, view, slots):
+        if slots is None:
+            return view
+        if self._last_full is None:
+            raise RuntimeError("absorb(slots=...) needs the matching "
+                               "decode_view(slots=...) first")
+        return _scatter_slots(self._last_full, view,
+                              jnp.asarray(list(slots), jnp.int32),
+                              axes=self._dense_axes)
+
+    def absorb(self, view, slots: Optional[Sequence[int]] = None) -> None:
+        """Install a decode step's updated dense view back into storage
+        (``slots`` must match the producing :meth:`decode_view`)."""
+        self._stash = None
+        full = self._merge_subset(view, slots)
+        self._last_full = None
+        self._store(to_host(full) if self._host else full)
+
+    def prefetch(self, slots: Sequence[int]) -> None:
+        """Issue the NEXT cohort's device fetch one tick ahead (host
+        decode residency only — device-resident pools have nothing to
+        hide).  The stash is invalidated by any pool mutation; a matching
+        :meth:`decode_view` consumes it and counts a hit."""
+        if not self._host or not slots:
+            return
+        full = self._dense_view()
+        sub = to_device(_gather_slots(
+            full, jnp.asarray(list(slots), jnp.int32),
+            axes=self._dense_axes))
+        self._stash = (tuple(int(s) for s in slots), sub, full)
 
     def write(self, slot: int, single_cache) -> None:
         """Install a freshly prefilled batch=1 cache into ``slot``."""
-        self.caches = _write_slot(self.caches, single_cache,
-                                  jnp.int32(slot), axes=self._axes)
+        self._stash = None
+        caches = _write_slot(self.caches, single_cache,
+                             jnp.int32(slot), axes=self._axes)
+        self.caches = to_host(caches) if self._host else caches
+
+
+class PagedCachePool(CachePool):
+    """``paged_kv``: full-attention K/V in a shared page pool behind a
+    per-slot block table; ring-window and recurrent-state kinds stay
+    slot-resident.  The dense decode view is gathered (unassigned pages
+    read as zeros — identical to the contiguous pool's zero init, which
+    is what keeps decode bit-identical) and scattered back on absorb;
+    writes to unallocated pages drop, so a freed slot's history can never
+    leak into the pool."""
+
+    kind = "paged_kv"
+
+    def __init__(self, cfg, plan: ExecutionPlan):
+        if plan.mesh is not None and plan.mesh.n_devices > 1:
+            raise ValueError("paged_kv pools are single-host; drop mesh=")
+        self.plan = plan  # _geometry needs it before super().__init__
+        super().__init__(cfg, plan)
+        self.pages = PageManager(self._geom.n_pages, self._geom.page_size,
+                                 self.n_slots, self.max_len)
+
+    def _geometry(self) -> PageGeometry:
+        ps = int(self.plan.get("page_size", 16))
+        n_pages = int(self.plan.get("n_pages", 1))
+        return PageGeometry(ps, n_pages, max(1, -(-self.max_len // ps)))
+
+    def _is_paged(self, kind: str) -> bool:
+        return f"{self.kind}/{kind}" in CACHE_INITS
+
+    # ------------------------------------------------------------------
+    def can_admit(self, seq_len: int = 0) -> bool:
+        return bool(self._free) and self.pages.can_alloc(
+            self._free[0], max(1, seq_len))
+
+    def acquire(self, rid: int, seq_len: int = 0) -> Optional[int]:
+        if not self._free:
+            return None
+        if not self.pages.can_alloc(self._free[0], max(1, seq_len)):
+            return None  # slot free but the page pool can't hold the prompt
+        slot = super().acquire(rid, seq_len)
+        self.pages.alloc(slot, max(1, seq_len))
+        return slot
+
+    def release(self, slot: int) -> None:
+        freed = self.pages.free(slot)
+        super().release(slot)  # zeroes the resident (pos) slices
+        if freed:
+            idx = jnp.asarray(freed, jnp.int32)
+            out = []
+            for (pat, _c), group in zip(self.cfg.scan_segments(),
+                                        self.caches):
+                g = []
+                for kind, c in zip(pat, group):
+                    if self._is_paged(kind):
+                        c = dict(c, k=c["k"].at[:, idx].set(0),
+                                 v=c["v"].at[:, idx].set(0))
+                    g.append(c)
+                out.append(tuple(g))
+            self.caches = out
+
+    def grow(self, slot: int) -> bool:
+        return self.pages.grow(slot) is not None
+
+    # ------------------------------------------------------------------
+    def _dense_view(self):
+        table = jnp.asarray(self.pages.table)
+        out = []
+        for (pat, _c), group in zip(self.cfg.scan_segments(), self.caches):
+            g = []
+            for kind, c in zip(pat, group):
+                if self._is_paged(kind):
+                    c = {"k": gather_pages(c["k"], table,
+                                           max_len=self.max_len),
+                         "v": gather_pages(c["v"], table,
+                                           max_len=self.max_len),
+                         "pos": c["pos"], "ring": c["ring"]}
+                g.append(c)
+            out.append(tuple(g))
+        return out
+
+    def _store(self, dense) -> None:
+        table = jnp.asarray(self.pages.table)
+        out = []
+        for (pat, _c), group_s, group_d in zip(self.cfg.scan_segments(),
+                                               self.caches, dense):
+            g = []
+            for kind, sc, dc in zip(pat, group_s, group_d):
+                if self._is_paged(kind):
+                    dc = {"k": scatter_pages(sc["k"], table, dc["k"]),
+                          "v": scatter_pages(sc["v"], table, dc["v"]),
+                          "pos": dc["pos"], "ring": dc["ring"]}
+                g.append(dc)
+            out.append(tuple(g))
+        self.caches = out
+
+    def write(self, slot: int, single_cache) -> None:
+        self._stash = None
+        # resident leaves (pos) via the generic structural write — page
+        # leaves are slot-shared (axis -1) and skip — then the prefilled
+        # K/V rows scatter onto the pages acquire() allocated
+        caches = _write_slot(self.caches, single_cache,
+                             jnp.int32(slot), axes=self._axes)
+        row = jnp.asarray(self.pages.table[slot:slot + 1])
+        out = []
+        for (pat, _c), group_p, group_s in zip(self.cfg.scan_segments(),
+                                               caches, single_cache):
+            g = []
+            for kind, pc, sc in zip(pat, group_p, group_s):
+                if self._is_paged(kind):
+                    pc = dict(pc, k=scatter_pages(pc["k"], row, sc["k"]),
+                              v=scatter_pages(pc["v"], row, sc["v"]))
+                g.append(pc)
+            out.append(tuple(g))
+        self.caches = to_host(out) if self._host else out
+
+
+class QuantCachePool(CachePool):
+    """``quant_kv``: int8 K/V codes + fp32 per-(position, kv-head) scales
+    for the full-attention kinds; everything else stays dense.  Prefill
+    quantises the whole written prompt once; each decode step quantises
+    ONLY the newly written position (``absorb``), so a stored code is
+    written exactly once and never drifts — which makes pooled decode
+    bit-identical to sequential decode under the same quantised cache."""
+
+    kind = "quant_kv"
+
+    def __init__(self, cfg, plan: ExecutionPlan):
+        if plan.mesh is not None and plan.mesh.n_devices > 1:
+            raise ValueError("quant_kv pools are single-host; drop mesh=")
+        self.plan = plan
+        super().__init__(cfg, plan)
+
+    def _is_quant(self, kind: str) -> bool:
+        return f"{self.kind}/{kind}" in CACHE_INITS
+
+    # ------------------------------------------------------------------
+    def _dense_view(self):
+        dt = self.cfg.dtype
+        out = []
+        for (pat, _c), group in zip(self.cfg.scan_segments(), self.caches):
+            g = []
+            for kind, c in zip(pat, group):
+                if self._is_quant(kind):
+                    c = {"k": dequantise(c["k_q"], c["k_s"], dtype=dt),
+                         "v": dequantise(c["v_q"], c["v_s"], dtype=dt),
+                         "pos": c["pos"], "ring": c["ring"]}
+                g.append(c)
+            out.append(tuple(g))
+        return out
+
+    def _quantise_tree(self, dense):
+        out = []
+        for (pat, _c), group in zip(self.cfg.scan_segments(), dense):
+            g = []
+            for kind, c in zip(pat, group):
+                if self._is_quant(kind):
+                    kq, ks = quantise(c["k"])
+                    vq, vs = quantise(c["v"])
+                    c = {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs,
+                         "pos": c["pos"], "ring": c["ring"]}
+                g.append(c)
+            out.append(tuple(g))
+        return out
+
+    def _store(self, dense) -> None:
+        out = []
+        for (pat, _c), group_q, group_d in zip(self.cfg.scan_segments(),
+                                               self.caches, dense):
+            g = []
+            for kind, qc, dc in zip(pat, group_q, group_d):
+                if self._is_quant(kind):
+                    dc = _quant_absorb_kind(qc, dc)
+                g.append(dc)
+            out.append(tuple(g))
+        self.caches = out
+
+    def write(self, slot: int, single_cache) -> None:
+        self._stash = None
+        caches = _write_slot(self.caches, self._quantise_tree(single_cache),
+                             jnp.int32(slot), axes=self._axes)
+        self.caches = to_host(caches) if self._host else caches
+
+
+@jax.jit
+def _quant_absorb_kind(qc, dc):
+    """Write-back for one quantised layer group after a decode step:
+    quantise each slot's row at its PRE-decode position (the one position
+    ``attn_decode`` just wrote) into the int8 store; every other stored
+    code is untouched.  Slots the step didn't decode write zeros over the
+    zeros already at their (unwritten) position — a no-op by construction,
+    so one jitted path serves full-pool and cohort absorbs alike."""
+    S = qc["k_q"].shape[2]
+    idx = jnp.minimum(qc["pos"], S - 1)                       # (C, B)
+    ci = jnp.arange(qc["k_q"].shape[0])[:, None]
+    bi = jnp.arange(qc["k_q"].shape[1])[None, :]
+
+    def put(qs, ss, dense):
+        row = jnp.take_along_axis(
+            dense, idx[:, :, None, None, None], axis=2)[:, :, 0]
+        q, s = quantise(row)                                  # (C,B,kv,hd)
+        return qs.at[ci, bi, idx].set(q), ss.at[ci, bi, idx].set(s)
+
+    kq, ks = put(qc["k_q"], qc["k_s"], dc["k"])
+    vq, vs = put(qc["v_q"], qc["v_s"], dc["v"])
+    return {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs,
+            "pos": dc["pos"], "ring": dc["ring"]}
+
+
+# ---------------------------------------------------------------------------
+# pool-kind registry (the third seam next to bytes + init)
+# ---------------------------------------------------------------------------
+
+POOL_KINDS: Dict[str, Type[CachePool]] = {}
+
+
+def register_pool_kind(kind: str, cls: Optional[Type[CachePool]] = None):
+    """Register the pool class serving a ``cache_kind`` plan extra (the
+    companion of :func:`register_cache_init` /
+    :func:`repro.exec.planner.register_cache_bytes`)."""
+    def _do(c):
+        if kind in POOL_KINDS:
+            raise ValueError(f"pool cache kind {kind!r} already registered")
+        POOL_KINDS[kind] = c
+        return c
+
+    if cls is not None:
+        return _do(cls)
+    return _do
+
+
+register_pool_kind("full", CachePool)
+register_pool_kind("paged_kv", PagedCachePool)
+register_pool_kind("quant_kv", QuantCachePool)
+
+
+def make_pool(cfg, plan: ExecutionPlan) -> CachePool:
+    """Build the pool a ``serve_pool`` plan describes, dispatching on its
+    ``cache_kind`` extra (default: the contiguous full pool)."""
+    kind = plan.get("cache_kind", "full")
+    try:
+        cls = POOL_KINDS[kind]
+    except KeyError:
+        raise KeyError(
+            f"no cache pool registered for kind {kind!r}; known: "
+            f"{sorted(POOL_KINDS)} — register one with "
+            f"repro.serve.cache_pool.register_pool_kind") from None
+    return cls(cfg, plan)

@@ -46,6 +46,7 @@ class Request:
     top_k: int = 0                   # 0 = full vocab
     seed: int = 0
     features: Optional[np.ndarray] = None  # VLM patch embeds / encdec frames
+    priority: int = 0                # higher = more urgent (admission order)
 
     @property
     def prompt_len(self) -> int:
@@ -63,6 +64,7 @@ class RequestState:
     finish_tick: float = -1.0
     finish_wall: float = -1.0        # metrics only, never read by logic
     prefill_chunks: int = 1          # row chunks the prefill plan picked
+    prefill_left: int = 0            # chunks still to run (preemptible mode)
 
     @property
     def rid(self) -> int:
@@ -98,24 +100,39 @@ def make_requests(n: int, vocab: int, *, seed: int = 0,
                   mean_interarrival: float = 0.0,
                   temperature: float = 0.0, top_k: int = 0,
                   frontend: str = "none", n_feature_tokens: int = 0,
-                  feature_dim: int = VISION_DIM) -> List[Request]:
+                  feature_dim: int = VISION_DIM,
+                  priority: Union[int, Tuple[int, int], Sequence[int]] = 0,
+                  burst_size: int = 4) -> List[Request]:
     """Deterministic simulated traffic.
 
     ``traffic="static"`` — everything arrives at tick 0 (the old one-shot
     batch, expressed as requests).  ``traffic="poisson"`` — exponential
     inter-arrival times with the given mean (in ticks), the standard
-    open-loop serving model.  ``frontend`` != "none" attaches per-request
-    feature stubs: ``vision`` -> (n_feature_tokens, feature_dim) patch
-    embeddings, ``audio`` -> (n_feature_tokens, feature_dim) frames.
+    open-loop serving model.  ``traffic="bursty"`` — Poisson-sized clumps
+    of ~``burst_size`` requests sharing one arrival tick, with exponential
+    gaps between clumps (mean ``mean_interarrival * burst_size``, so the
+    long-run rate matches the plain Poisson stream) — the SLO stress
+    pattern: quiet, then a pile-up.  ``frontend`` != "none" attaches
+    per-request feature stubs: ``vision`` -> (n_feature_tokens,
+    feature_dim) patch embeddings, ``audio`` -> same-shaped frames.
+    ``priority`` accepts the same int / (lo, hi) / choice-list forms as
+    the length knobs (higher = more urgent).
     """
-    if traffic not in ("static", "poisson"):
+    if traffic not in ("static", "poisson", "bursty"):
         raise ValueError(f"unknown traffic model {traffic!r}")
     rng = np.random.default_rng(seed)
     t = 0.0
+    burst_left = 0
     out: List[Request] = []
     for rid in range(n):
         if traffic == "poisson" and mean_interarrival > 0:
             t += float(rng.exponential(mean_interarrival))
+        elif traffic == "bursty" and mean_interarrival > 0:
+            if burst_left <= 0:
+                t += float(rng.exponential(
+                    mean_interarrival * max(1, burst_size)))
+                burst_left = 1 + int(rng.poisson(max(0, burst_size - 1)))
+            burst_left -= 1  # clump members share this arrival tick
         p = _span(rng, prompt_len)
         prompt = rng.integers(0, vocab, (p,)).astype(np.int32)
         features = None
@@ -125,5 +142,6 @@ def make_requests(n: int, vocab: int, *, seed: int = 0,
         out.append(Request(
             rid=rid, prompt=prompt, max_new_tokens=_span(rng, max_new_tokens),
             arrival=t, temperature=temperature, top_k=top_k,
-            seed=seed * 100_003 + rid, features=features))
+            seed=seed * 100_003 + rid, features=features,
+            priority=_span(rng, priority)))
     return out

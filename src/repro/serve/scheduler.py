@@ -7,10 +7,31 @@ queued request the moment a slot frees up (continuous batching) instead of
 waiting for the whole batch to drain (static batching, kept as
 ``mode="static"`` for the ablation benchmarks).
 
-Time is a simulated tick counter: every engine call (one request's chunked
-prefill, or one batched decode step over the pool) costs one tick, and
-request arrivals are tick-denominated (see :mod:`repro.serve.request`).
-No wall-clock enters the logic — a (requests, plan, seed) triple replays
+Production semantics layered on the same tick clock:
+
+* **priorities** — arrived requests admit highest-priority first
+  (``Request.priority``, ties broken by arrival then rid — identical to
+  the plain FIFO order when every priority is equal);
+* **preemptible prefill** — a prompt's budget-chunked prefill spends one
+  tick per row chunk instead of one atomic tick, and a higher-priority
+  arrival may evict a strictly-lower-priority in-flight prefill (the
+  victim re-queues and later replays identically: tokens are keyed on
+  (request seed, step), never on scheduling history);
+* **page-pressure preemption** — when a ``paged_kv`` pool can't grow a
+  decoding slot by one token, the lowest-priority / latest-arrival other
+  decoder is evicted back to QUEUED and its pages fund the growth;
+* **decode cohorts** — ``decode_batch`` on the plan caps the per-tick
+  decode width; active slots rotate round-robin through fixed-size
+  cohorts (two jit shapes total), and the *next* cohort's device fetch is
+  prefetched one tick ahead under host decode-state residency;
+* **SLO accounting** — p50/p95 latency and time-to-first-token targets
+  (:class:`SLO`) checked against the tick-denominated measurements in
+  :meth:`ServeReport.summary`, for bursty-traffic capacity studies.
+
+Time is a simulated tick counter: every engine call (one prefill chunk or
+whole prefill, or one batched decode step) costs one tick, and request
+arrivals are tick-denominated (see :mod:`repro.serve.request`).  No
+wall-clock enters the logic — a (requests, plan, seed) triple replays
 bit-for-bit.  ``walltime_fn`` (benchmarks only) stamps completions for
 latency percentiles without influencing any decision.
 """
@@ -22,7 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.cache_pool import CachePool
+from repro.serve.cache_pool import CachePool, make_pool
 from repro.serve.engine import ServeEngine
 from repro.serve.request import Phase, Request, RequestState
 
@@ -36,6 +57,39 @@ def percentile(values: Sequence[float], p: float) -> float:
     return vals[min(len(vals) - 1, int(round(p * (len(vals) - 1))))]
 
 
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Latency objectives in scheduler ticks (0 = unset).  ``latency`` is
+    arrival -> completion, ``ttft`` is arrival -> first token; the p50/p95
+    fields bound the corresponding measured percentiles."""
+
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    p50_ttft: float = 0.0
+    p95_ttft: float = 0.0
+
+    def check(self, latencies: Sequence[float],
+              ttfts: Sequence[float]) -> dict:
+        """Measured percentiles vs targets, plus per-request *attainment*
+        (fraction of requests inside every set p95 target)."""
+        measured = {
+            "p50_latency": percentile(latencies, 0.50),
+            "p95_latency": percentile(latencies, 0.95),
+            "p50_ttft": percentile(ttfts, 0.50),
+            "p95_ttft": percentile(ttfts, 0.95),
+        }
+        targets = dataclasses.asdict(self)
+        met = {k: measured[k] <= t for k, t in targets.items() if t > 0}
+        ok = [lat <= self.p95_latency if self.p95_latency else True
+              for lat in latencies]
+        if self.p95_ttft and ttfts:
+            ok = [o and t <= self.p95_ttft for o, t in zip(ok, ttfts)]
+        att = (sum(ok) / len(ok)) if ok else 1.0
+        return {"targets": {k: v for k, v in targets.items() if v > 0},
+                "measured": measured, "met": met,
+                "attainment": round(att, 4)}
+
+
 @dataclasses.dataclass
 class ServeReport:
     """What a scheduler run produced, for tests / benchmarks / the CLI."""
@@ -45,6 +99,9 @@ class ServeReport:
     n_prefills: int = 0
     n_decode_steps: int = 0
     max_active: int = 0
+    n_preempted: int = 0
+    prefetch_hits: int = 0
+    slo: Optional[SLO] = None
     slot_history: Dict[int, List[int]] = dataclasses.field(
         default_factory=dict)
 
@@ -62,20 +119,35 @@ class ServeReport:
         """Per-request arrival -> completion, in ticks (queueing included)."""
         return [s.finish_tick - s.request.arrival for s in self.states]
 
+    def ttft_ticks(self) -> List[float]:
+        """Per-request arrival -> first token, in ticks.  A preempted
+        request keeps its FIRST emission time — the user already saw that
+        token stream start."""
+        return [s.first_token_tick - s.request.arrival
+                for s in self.states if s.first_token_tick >= 0]
+
     def summary(self) -> dict:
         lat = self.latency_ticks()
-        return {
+        ttft = self.ttft_ticks()
+        out = {
             "requests": len(self.states),
             "generated_tokens": self.total_generated,
             "ticks": self.total_ticks,
             "prefills": self.n_prefills,
             "decode_steps": self.n_decode_steps,
             "max_active": self.max_active,
+            "preemptions": self.n_preempted,
+            "prefetch_hits": self.prefetch_hits,
             "tok_per_tick": round(self.total_generated
                                   / max(1.0, self.total_ticks), 3),
             "p50_latency_ticks": percentile(lat, 0.50),
             "p95_latency_ticks": percentile(lat, 0.95),
+            "p50_ttft_ticks": percentile(ttft, 0.50),
+            "p95_ttft_ticks": percentile(ttft, 0.95),
         }
+        if self.slo is not None:
+            out["slo"] = self.slo.check(lat, ttft)
+        return out
 
 
 class Scheduler:
@@ -87,23 +159,37 @@ class Scheduler:
     admitted only into an empty pool and runs until its *last* member
     finishes (finished slots idle — exactly the waste continuous batching
     removes).
+
+    ``preemptible_prefill=True`` runs each admitted prompt's prefill one
+    row chunk per tick and lets strictly-higher-priority arrivals evict
+    it; the pool's ``decode_batch`` extra (from
+    ``Planner.for_serve(..., decode_batch=)``) caps the decode cohort per
+    tick.  Both default off, leaving the original semantics untouched.
     """
 
     def __init__(self, engine: ServeEngine, pool: CachePool,
                  requests: Sequence[Request], mode: str = "continuous",
-                 walltime_fn: Optional[Callable[[], float]] = None):
+                 walltime_fn: Optional[Callable[[], float]] = None,
+                 preemptible_prefill: bool = False,
+                 slo: Optional[SLO] = None):
         if mode not in ("continuous", "static"):
             raise ValueError(f"unknown scheduler mode {mode!r}")
         self.engine = engine
         self.pool = pool
         self.mode = mode
         self.walltime_fn = walltime_fn
+        self.preemptible_prefill = preemptible_prefill
+        self.slo = slo
         self.states = [RequestState(r) for r in
                        sorted(requests, key=lambda r: (r.arrival, r.rid))]
         self.tick = 0.0
         self.n_prefills = 0
         self.n_decode_steps = 0
         self.max_active = 0
+        self.n_preempted = 0
+        self.decode_batch = int(pool.plan.get("decode_batch", 0) or 0)
+        #: round-robin cohort order over decoding slots
+        self._rotation: List[int] = []
         # last sampled token per slot; free slots hold 0 and their rows'
         # outputs are discarded (static-shape continuous batching)
         self.last_token = np.zeros(pool.n_slots, np.int32)
@@ -115,9 +201,19 @@ class Scheduler:
     def _decoding(self) -> List[RequestState]:
         return [s for s in self.states if s.phase is Phase.DECODE]
 
+    def _prefilling(self) -> List[RequestState]:
+        return [s for s in self.states if s.phase is Phase.PREFILL]
+
     @property
     def all_done(self) -> bool:
         return all(s.done for s in self.states)
+
+    def _prompt_tokens(self, req: Request) -> int:
+        """Cache positions the prompt occupies (page pre-allocation)."""
+        need = req.prompt_len
+        if self.engine.cfg.frontend == "vision":
+            need += self.engine.cfg.n_frontend_tokens
+        return need
 
     # ------------------------------------------------------------------
     def _finish(self, st: RequestState) -> None:
@@ -126,47 +222,174 @@ class Scheduler:
         if self.walltime_fn is not None:
             st.finish_wall = self.walltime_fn()
         self.pool.release(st.slot)
+        if st.slot in self._rotation:
+            self._rotation.remove(st.slot)
 
+    def _preempt(self, st: RequestState) -> None:
+        """Evict an admitted request back to QUEUED.  Its slot/pages are
+        freed and its generated tokens dropped — a later re-admission
+        replays the exact same stream (sampling is keyed on (seed, step)),
+        so preemption costs latency, never determinism.  TTFT keeps the
+        first emission."""
+        self.pool.release(st.slot)
+        if st.slot in self._rotation:
+            self._rotation.remove(st.slot)
+        st.slot = -1
+        st.phase = Phase.QUEUED
+        st.generated.clear()
+        st.prefill_left = 0
+        self.n_preempted += 1
+
+    @staticmethod
+    def _victim(cands: List[RequestState]) -> Optional[RequestState]:
+        """Deterministic eviction choice: lowest priority first, then the
+        latest arrival (LIFO within a priority class), then highest rid."""
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (s.request.priority,
+                                         -s.request.arrival, -s.rid))
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
     def _admit(self, st: RequestState) -> bool:
-        slot = self.pool.acquire(st.rid)
+        slot = self.pool.acquire(st.rid, seq_len=self._prompt_tokens(
+            st.request))
         if slot is None:
             return False
         st.slot = slot
         st.phase = Phase.PREFILL
         st.admit_tick = self.tick
+        if self.preemptible_prefill:
+            # one row chunk per tick; the engine call runs when the last
+            # chunk's tick completes (step() drives _prefill_advance)
+            plan = self.engine.prefill_plan(st.request.prompt_len)
+            st.prefill_chunks = plan.n_rows
+            st.prefill_left = plan.n_rows
+            return True
+        self._run_prefill(st)
+        return True
+
+    def _run_prefill(self, st: RequestState) -> None:
+        """The engine half of admission: run the (chunked) prefill, write
+        the slot, sample token 0."""
         logits, cache, st.prefill_chunks = self.engine.prefill(st.request)
-        self.pool.write(slot, cache)
+        self.pool.write(st.slot, cache)
         self.n_prefills += 1
-        self.tick += 1.0  # one engine call
+        if not self.preemptible_prefill:
+            self.tick += 1.0  # one engine call (chunk ticks counted already
+            #                   by _prefill_advance in preemptible mode)
         if st.request.max_new_tokens <= 0:  # degenerate: prefill-only
             st.phase = Phase.DECODE
             self._finish(st)
-            return True
+            return
         tok = self.engine.sample(logits, st.request, step=0)
         st.generated.append(tok)
-        st.first_token_tick = self.tick
-        self.last_token[slot] = tok
+        if st.first_token_tick < 0:
+            st.first_token_tick = self.tick
+        self.last_token[st.slot] = tok
         st.phase = Phase.DECODE
+        self._rotation.append(st.slot)
         if st.finished_decoding():  # max_new_tokens == 1
             self._finish(st)
-        return True
+
+    def _prefill_advance(self) -> None:
+        """Preemptible-prefill mode: spend this tick on one row chunk of
+        the highest-priority in-flight prefill."""
+        pre = self._prefilling()
+        if not pre:
+            return
+        st = min(pre, key=lambda s: (-s.request.priority, s.admit_tick,
+                                     s.request.arrival, s.rid))
+        st.prefill_left -= 1
+        self.tick += 1.0
+        if st.prefill_left <= 0:
+            self._run_prefill(st)
 
     def _admit_ready(self) -> None:
         if self.mode == "static" and self.pool.n_active:
             return  # static batching: only refill a drained pool
-        for st in self._queued():
-            if st.request.arrival > self.tick:
-                break  # states are arrival-sorted
-            if not self._admit(st):
-                break  # pool full — stays QUEUED (budget admission control)
+        arrived = [s for s in self._queued()
+                   if s.request.arrival <= self.tick]
+        # highest priority first; FIFO (arrival, rid) within a class —
+        # identical to the original order when every priority is equal
+        arrived.sort(key=lambda s: (-s.request.priority, s.request.arrival,
+                                    s.rid))
+        for st in arrived:
+            if self._admit(st):
+                continue
+            if self.preemptible_prefill:
+                victim = self._victim(
+                    [p for p in self._prefilling()
+                     if p.request.priority < st.request.priority])
+                if victim is not None:
+                    self._preempt(victim)
+                    if self._admit(st):
+                        continue
+            break  # pool full — stays QUEUED (budget admission control)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _grow_or_preempt(self, st: RequestState) -> bool:
+        """Page capacity for ``st``'s next token, evicting other decoders
+        under page pressure.  False if ``st`` itself got impossible."""
+        while not self.pool.grow(st.slot):
+            victim = self._victim([d for d in self._decoding()
+                                   if d is not st])
+            if victim is None:
+                raise RuntimeError(
+                    f"request {st.rid}: page pool exhausted with no "
+                    f"preemption candidates — the plan's n_pages cannot "
+                    f"hold one max-length request; raise n_pages/budget")
+            self._preempt(victim)
+        return True
 
     def _decode_once(self) -> None:
-        logits, self.pool.caches = self.engine.decode_step(
-            self.last_token, self.pool.caches)
+        decoding = self._decoding()
+        if self.decode_batch and len(decoding) > self.decode_batch:
+            slots = self._rotation[: self.decode_batch]
+            cohort = [s for s in decoding if s.slot in slots]
+        else:
+            slots = None
+            cohort = decoding
+        for st in list(cohort):
+            if st.phase is Phase.DECODE:  # earlier preemption may evict it
+                self._grow_or_preempt(st)
+        cohort = [s for s in cohort if s.phase is Phase.DECODE]
+        if slots is not None:
+            live = {st.slot for st in cohort}
+            slots = [s for s in slots if s in live]
+            if len(slots) != self.decode_batch:
+                # preemption shrank the cohort below the jitted width;
+                # fall back to the full-pool shape this tick (growing the
+                # decoders the cohort pass skipped)
+                slots = None
+                for st in self._decoding():
+                    if st.slot not in live and st.phase is Phase.DECODE:
+                        self._grow_or_preempt(st)
+                cohort = self._decoding()
+        if not cohort:
+            return
+        if slots is None:
+            view = self.pool.decode_view()
+            logits, view = self.engine.decode_step(self.last_token, view)
+            self.pool.absorb(view)
+            row = {st.slot: st.slot for st in cohort}
+        else:
+            view = self.pool.decode_view(slots)
+            logits, view = self.engine.decode_step(
+                self.last_token[slots], view)
+            self.pool.absorb(view, slots)
+            # rotate: this cohort goes to the back, then warm the next one
+            self._rotation = ([s for s in self._rotation if s not in slots]
+                              + [s for s in slots if s in self._rotation])
+            self.pool.prefetch(self._rotation[: self.decode_batch])
+            row = {s: i for i, s in enumerate(slots)}
         self.n_decode_steps += 1
         self.tick += 1.0
-        for st in self._decoding():
-            tok = self.engine.sample(logits[st.slot], st.request,
+        for st in cohort:
+            tok = self.engine.sample(logits[row[st.slot]], st.request,
                                      step=st.n_generated)
             st.generated.append(tok)
             self.last_token[st.slot] = tok
@@ -175,15 +398,28 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One scheduler iteration: jump idle time, admit, decode once."""
+        """One scheduler iteration: jump idle time, admit, advance one
+        prefill chunk (preemptible mode), decode once."""
         queued = self._queued()
         if not self.pool.n_active and queued \
                 and queued[0].request.arrival > self.tick:
             self.tick = queued[0].request.arrival  # fast-forward idle time
+        before = self.tick
         self._admit_ready()
         self.max_active = max(self.max_active, self.pool.n_active)
-        if self.pool.n_active:
+        self._prefill_advance()
+        if self._decoding():
             self._decode_once()
+        if self.tick == before and not self.pool.n_active:
+            # nothing ran and nothing is admitted: every remaining request
+            # is unadmittable (e.g. a prompt larger than the page pool)
+            stuck = [s.rid for s in self._queued()
+                     if s.request.arrival <= self.tick]
+            if stuck:
+                raise RuntimeError(
+                    f"scheduler stalled: requests {stuck} can never be "
+                    f"admitted under this plan (pool/page capacity too "
+                    f"small for a single request)")
 
     def run(self) -> ServeReport:
         while not self.all_done:
@@ -192,6 +428,8 @@ class Scheduler:
             states=sorted(self.states, key=lambda s: s.rid),
             total_ticks=self.tick, n_prefills=self.n_prefills,
             n_decode_steps=self.n_decode_steps, max_active=self.max_active,
+            n_preempted=self.n_preempted,
+            prefetch_hits=self.pool.prefetch_hits, slo=self.slo,
             slot_history={i: list(h)
                           for i, h in enumerate(self.pool.history)})
 
@@ -200,6 +438,10 @@ def serve(params, cfg, requests: Sequence[Request], *,
           budget: int = 0, n_slots: int = 0, max_len: int = 0,
           enc_len: int = 0, prefill_budget: int = 0,
           mode: str = "continuous", mesh=None, residency: str = "",
+          cache_kind: str = "full", page_size: int = 16, avg_len: int = 0,
+          n_pages: int = 0, decode_residency: str = "",
+          decode_batch: int = 0, preemptible_prefill: bool = False,
+          slo: Optional[SLO] = None,
           walltime_fn: Optional[Callable[[], float]] = None):
     """One-call serving loop: plan the pool, build engine + pool +
     scheduler, run to completion.  Returns (report, plan).
@@ -208,24 +450,41 @@ def serve(params, cfg, requests: Sequence[Request], *,
     per-device and shards the decode-slot pool across the data axis.
     ``residency=`` ("host"/"recompute") is recorded on every prompt's
     budget-chunked prefill plan (the boundary-cache policy the prefill
-    path would execute under a registry-engine prefill)."""
+    path would execute under a registry-engine prefill).
+
+    ``cache_kind`` picks the pool layout ("full" / "paged_kv" /
+    "quant_kv" or any registered kind); for paged pools ``avg_len``
+    defaults to the actual traffic's mean sequence length, which is what
+    lets the planner admit more than worst-case slots.
+    ``decode_residency="host"`` keeps decode state in host memory with
+    the ``decode_batch`` cohort fetched one tick ahead (decode-state
+    residency); ``preemptible_prefill`` / ``slo`` are scheduler policy
+    (see :class:`Scheduler` / :class:`SLO`)."""
     from repro.exec.planner import Planner
+    need = [r.prompt_len + r.max_new_tokens for r in requests]
+    if cfg.frontend == "vision":
+        need = [n + cfg.n_frontend_tokens for n in need]
     if not max_len:
-        need = max(r.prompt_len + r.max_new_tokens for r in requests)
-        if cfg.frontend == "vision":
-            need += cfg.n_frontend_tokens
-        max_len = need
+        max_len = max(need)
+    if cache_kind == "paged_kv" and not avg_len:
+        avg_len = -(-sum(need) // len(need))  # ceil of the traffic mean
     # more slots than requests would only widen every decode step
     plan = Planner.for_serve(cfg, max_len, budget=budget, enc_len=enc_len,
                              n_slots=n_slots, mesh=mesh,
-                             n_max=max(1, min(256, len(requests))))
+                             n_max=max(1, min(256, len(requests))),
+                             cache_kind=cache_kind, page_size=page_size,
+                             avg_len=avg_len, n_pages=n_pages,
+                             decode_residency=decode_residency or None,
+                             decode_batch=decode_batch)
     if mesh is not None and prefill_budget:
         # a request's chunked prefill runs unsharded on one device, so it
         # must fit the PER-DEVICE slice of the budget, like everything else
         prefill_budget //= max(1, mesh.batch_extent)
     engine = ServeEngine(params, cfg, plan, prefill_budget=prefill_budget,
                          residency=residency)
-    pool = CachePool(cfg, plan)
+    pool = make_pool(cfg, plan)
     report = Scheduler(engine, pool, requests, mode=mode,
-                       walltime_fn=walltime_fn).run()
+                       walltime_fn=walltime_fn,
+                       preemptible_prefill=preemptible_prefill,
+                       slo=slo).run()
     return report, plan
