@@ -2,11 +2,58 @@
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
+
+#: version of the BENCH_summary.json layout (bump on breaking change)
+SUMMARY_SCHEMA = 1
+
+#: key-suffix -> unit inference for derived metrics
+_UNIT_SUFFIXES = (
+    ("_us", "us"), ("us_per_call", "us"), ("_bytes", "bytes"),
+    ("_gb", "GiB"), ("_mb", "MiB"), ("_s", "s"), ("_ticks", "ticks"),
+    ("tok_per_tick", "tok/tick"), ("tok_per_s", "tok/s"),
+    ("_ratio", "ratio"), ("ratio", "ratio"), ("_pct", "%"),
+)
+
+
+def _units_for(key: str) -> str:
+    k = key.lower()
+    for suffix, unit in _UNIT_SUFFIXES:
+        if k.endswith(suffix):
+            return unit
+    return ""
+
+
+def normalize_row(bench: str, row: Dict) -> Dict:
+    """One bench row -> the BENCH_summary shape: (bench, name, key
+    metric + units, everything else under extras).  The key metric is
+    ``us_per_call`` when timed, else the first numeric derived value —
+    the same priority :func:`emit`'s CSV leads with."""
+    rest = {k: v for k, v in row.items() if k not in ("name", "us_per_call")}
+    if row.get("us_per_call", "") != "":
+        metric, value = "us_per_call", float(row["us_per_call"])
+    else:
+        metric, value = "", None
+        for k, v in rest.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                metric, value = k, v
+                break
+        rest = {k: v for k, v in rest.items() if k != metric}
+    return {"bench": bench, "name": row["name"], "metric": metric,
+            "value": value, "units": _units_for(metric), "extras": rest}
+
+
+def write_summary(path: str, benches: List[Dict]) -> None:
+    """Write the normalized cross-bench summary (machine-diffable perf
+    trajectory across PRs)."""
+    with open(path, "w") as f:
+        json.dump({"schema": SUMMARY_SCHEMA, "benches": benches},
+                  f, indent=2, sort_keys=True, default=str)
 
 
 def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:

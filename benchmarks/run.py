@@ -1,14 +1,17 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--only fig8]``
-Prints ``name,us_per_call,derived`` CSV rows (us empty for analytic rows).
+Prints ``name,us_per_call,derived`` CSV rows (us empty for analytic rows)
+and aggregates every bench's rows into one normalized ``BENCH_summary.json``
+(``--summary`` overrides the path, empty disables) so the perf trajectory
+is machine-diffable across PRs.
 """
 
 import argparse
 import sys
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, normalize_row, write_summary
 
 MODULES = [
     ("fig6_fig7_memory", "benchmarks.bench_memory"),
@@ -28,10 +31,15 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--summary", default="BENCH_summary.json",
+                    help="normalized cross-bench summary path "
+                         "('' disables); with --only it covers only the "
+                         "benches that ran")
     args = ap.parse_args()
     import importlib
     print("name,us_per_call,derived")
     failures = 0
+    summary = []
     for tag, modname in MODULES:
         if args.only and args.only not in tag:
             continue
@@ -40,11 +48,16 @@ def main() -> None:
             mod = importlib.import_module(modname)
             rows = mod.run()
             emit(rows)
+            summary.extend(normalize_row(tag, r) for r in rows)
             print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"# {tag} FAILED: {type(e).__name__}: {e}",
                   file=sys.stderr)
+    if args.summary and summary:
+        write_summary(args.summary, summary)
+        print(f"# summary: {args.summary} ({len(summary)} rows)",
+              file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -53,8 +53,10 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
+from repro import obs
 from repro.exec.plan import ResidencySpec
 
 try:  # jax >= 0.4.35 keeps this internal; public alias landed later
@@ -188,6 +190,13 @@ def _map_leaves(fn, carry, names):
         treedef, [fn(l, n) for l, n in zip(leaves, names)])
 
 
+def _tree_bytes(tree) -> int:
+    """Byte size of a pytree from shape/dtype (works on tracers, which
+    the executor's obs hooks see — they fire at trace time)."""
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
 # ---------------------------------------------------------------------------
 # the shared executor
 # ---------------------------------------------------------------------------
@@ -196,11 +205,18 @@ def _map_leaves(fn, carry, names):
 def rowprog_forward(prog: RowProgram, args, collect: bool = False):
     """Plain forward sweep.  With ``collect`` also returns the carry
     entering each row (the boundary caches residency governs)."""
+    trace = obs.enabled()
     carry = prog.init_carry(args)
     ys, carries_in = [], []
     for r in range(prog.n_rows):
         if collect:
             carries_in.append(carry)
+        if trace:
+            # fires once per row at trace time; jit caches the trace, so
+            # the compiled step is identical with obs on or off
+            obs.span("fp_row", tick=r, n_rows=prog.n_rows,
+                     carry_bytes=_tree_bytes(carry))
+            obs.counter("rowprog.fp_rows").inc()
         carry, y = prog.row_step(carry, prog.row_args(args, r), r)
         ys.append(y)
     out = prog.finish(ys)
@@ -240,7 +256,19 @@ def make_rowprog_apply(prog: RowProgram,
             if p == "recompute":
                 return jnp.zeros((0,), leaf.dtype)
             return leaf
-        return _map_leaves(place_leaf, carry, names)
+        placed = _map_leaves(place_leaf, carry, names)
+        if obs.enabled():
+            leaves = jax.tree.leaves(carry)
+            off = sum(_tree_bytes(l) for l, n in zip(leaves, names)
+                      if res.placement(n) == "host")
+            drop = sum(_tree_bytes(l) for l, n in zip(leaves, names)
+                       if res.placement(n) == "recompute")
+            if off:
+                obs.event("offload", tick=r, bytes=off)
+                obs.counter("rowprog.offload_bytes").inc(off)
+            if drop:
+                obs.event("drop_recompute", tick=r, bytes=drop)
+        return placed
 
     def _fetch(saved, r, dep):
         """Issue the host->device copies for row ``r``'s host-placed
@@ -284,6 +312,9 @@ def make_rowprog_apply(prog: RowProgram,
         chains concurrently and re-materialize every cache at once."""
         if jax.tree.leaves(dep):
             args, _ = lax.optimization_barrier((args, dep))
+        if obs.enabled():
+            obs.event("recompute_chain", tick=upto, rows=upto)
+            obs.counter("rowprog.recompute_rows").inc(upto)
         carry = prog.init_carry(args)
         for rr in range(upto):
             carry, _ = prog.row_step(carry, prog.row_args(args, rr), rr)
@@ -311,12 +342,29 @@ def make_rowprog_apply(prog: RowProgram,
         # copies are prefetched — recompute chains are regenerated at
         # consumption time below, serialized behind the gradient carry,
         # so two chains are never live at once.
+        trace = obs.enabled()
         fetched = {}
         for r in range(prog.n_rows - 1, -1, -1):
             for rr in range(r, max(-1, r - 1 - res.prefetch_depth), -1):
                 if rr not in fetched:
                     fetched[rr] = _fetch(saved[rr], rr, dcarry)
+                    placements = _placements(saved[rr], rr)
+                    if trace and "host" in placements:
+                        host_bytes = sum(
+                            _tree_bytes(l) for l, p in
+                            zip(jax.tree.leaves(saved[rr]), placements)
+                            if p == "host")
+                        # depth = how many rows ahead of consumption the
+                        # copy is issued (0 = demand fetch)
+                        obs.event("prefetch", tick=r, row=rr, depth=r - rr,
+                                  bytes=host_bytes)
+                        obs.counter("rowprog.prefetches").inc()
+                        obs.counter("rowprog.prefetch_bytes").inc(host_bytes)
             carry_in = fetched.pop(r)
+            if trace:
+                obs.span("bp_row", tick=r, n_rows=prog.n_rows,
+                         recomputes=_row_recomputes(saved[r], r))
+                obs.counter("rowprog.bp_rows").inc()
             if _row_recomputes(saved[r], r):
                 carry_in = _merge_recomputed(
                     carry_in, _recompute_chain(args, r, dcarry), r)

@@ -18,12 +18,15 @@ import traceback
 
 import jax
 
+from repro import obs
 from repro.analysis.costmodel import analyze as cost_analyze
 from repro.analysis.roofline import analyze
 from repro.configs import get_config, list_configs
 from repro.exec import Planner, ResidencySpec, kernelize_plan
 from repro.launch.mesh import make_production_mesh, production_mesh_spec
 from repro.launch.steps import SHAPES, build_jitted, shape_applicable
+from repro.obs.audit import memory_metrics, plan_audit
+from repro.obs.cli import add_obs_args, configure_from_args
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
@@ -72,6 +75,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
+            # measured-vs-estimated peak bytes, next to the plan it
+            # audits (recorded in every artefact; also emitted to the
+            # trace when an obs session is active)
+            rec["plan_audit"] = plan_audit(
+                plan, memory_metrics(mem), "dryrun",
+                extra={"arch": arch, "shape": shape_name,
+                       "mesh_name": mesh_name})
             if verbose:
                 cost = compiled.cost_analysis()
                 if isinstance(cost, list):  # newer jaxlib: one dict per device
@@ -140,8 +150,11 @@ def main():
                     choices=["", "device", "host", "recompute"],
                     help="boundary-cache residency policy recorded on "
                          "the exec plan (artefacts replay it verbatim)")
+    add_obs_args(ap)
     args = ap.parse_args()
     overrides = _parse_overrides(args.set)
+    configure_from_args(args, tool="dryrun", arch=args.arch,
+                        shape=args.shape)
 
     archs = list_configs() if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
@@ -165,6 +178,7 @@ def main():
                 n_err += rec["status"] == "error"
                 n_skip += rec["status"] == "skipped"
     print(f"done: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    obs.shutdown()
     if n_err:
         raise SystemExit(1)
 

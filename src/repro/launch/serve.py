@@ -83,15 +83,21 @@ def main():
                     help="write a serve artefact JSON (args + resolved "
                          "pool plan + cache kind/decode residency + "
                          "summary) to this directory")
+    from repro.obs.cli import add_obs_args, configure_from_args, profiled
+    add_obs_args(ap)
     args = ap.parse_args()
 
     import jax
 
+    from repro import obs
     from repro.configs import get_config, get_reduced
     from repro.exec import MeshSpec
     from repro.models.lm import encdec as ED
     from repro.models.lm import model as LM
     from repro.serve import SLO, make_requests, serve
+
+    configure_from_args(args, tool="serve", arch=args.arch,
+                        cache_kind=args.cache_kind, traffic=args.traffic)
 
     mesh_spec = MeshSpec.parse(args.mesh) if args.mesh else None
     cfg = get_reduced(args.arch) if args.preset == "reduced" \
@@ -133,19 +139,26 @@ def main():
         slo = SLO(p50_latency=args.slo_p50, p95_latency=args.slo_p95)
 
     t0 = time.perf_counter()
-    report, plan = serve(params, cfg, requests, budget=budget,
-                         n_slots=0 if budget else args.batch,
-                         enc_len=enc_len, prefill_budget=budget,
-                         mesh=mesh_spec, residency=args.residency,
-                         cache_kind=args.cache_kind,
-                         page_size=args.page_size,
-                         decode_residency=args.decode_residency,
-                         decode_batch=args.decode_batch,
-                         preemptible_prefill=args.preemptible_prefill,
-                         slo=slo, walltime_fn=time.perf_counter)
+    with profiled(args):
+        report, plan = serve(params, cfg, requests, budget=budget,
+                             n_slots=0 if budget else args.batch,
+                             enc_len=enc_len, prefill_budget=budget,
+                             mesh=mesh_spec, residency=args.residency,
+                             cache_kind=args.cache_kind,
+                             page_size=args.page_size,
+                             decode_residency=args.decode_residency,
+                             decode_batch=args.decode_batch,
+                             preemptible_prefill=args.preemptible_prefill,
+                             slo=slo, walltime_fn=time.perf_counter)
     wall = time.perf_counter() - t0
 
     print("pool plan:", plan.describe())
+    if report.plan_audit is not None:
+        a = report.plan_audit
+        print(f"plan audit: {a['audited_term']} {a['est_bytes_per_device']} "
+              f"measured pool {a['measured']['peak_bytes']}"
+              + (f" ratio {a['ratio']:.3f}"
+                 if a['ratio'] is not None else ""))
     s = report.summary()
     print(f"arch={cfg.name} requests={s['requests']} traffic={args.traffic} "
           f"cache_kind={args.cache_kind} slots={plan.n_rows}")
@@ -186,12 +199,14 @@ def main():
             "exec_plan_per_device": plan.per_device().to_dict(),
             "slo": s.get("slo"),
             "summary": s,
+            "plan_audit": report.plan_audit,
         }
         tag = f"{cfg.name}_{args.cache_kind}_{args.traffic}"
         path = os.path.join(args.out, tag + ".json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=2)
         print(f"artefact: {path}")
+    obs.shutdown()
     print("serve OK")
 
 

@@ -41,7 +41,6 @@ Checkpoints + metrics land in --out.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -49,14 +48,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt import store
 from repro.data.pipeline import (
     ImageDataset, ImageDatasetConfig, TokenDataset, TokenDatasetConfig,
 )
+from repro.obs.audit import measure_step, plan_audit
+from repro.obs.cli import add_obs_args, configure_from_args, profiled
+from repro.obs.steplog import StepLog
 from repro.optim.adamw import (
     AdamWConfig, SGDConfig, adamw_init, adamw_update, sgd_init, sgd_update,
     warmup_cosine,
 )
+
+
+def _audit_step(step_fn, plan, source_extra, *step_args,
+                source="train_step"):
+    """Measure the compiled step's peak bytes against the plan estimate
+    (obs sessions only — AOT-lowering the step is a real compile)."""
+    if plan is None or not obs.enabled():
+        return None
+    measured = measure_step(step_fn, *step_args)
+    if measured is None:
+        return None
+    rec = plan_audit(plan, measured, source, extra=source_extra)
+    ratio = rec["ratio"]
+    print(f"plan audit: est/dev {rec['est_bytes_per_device']} "
+          f"measured peak {measured['peak_bytes']}"
+          + (f" ratio {ratio:.3f}" if ratio is not None else ""))
+    return rec
 
 
 def train_lm(args):
@@ -73,6 +93,7 @@ def train_lm(args):
         else get_config(args.arch)
     if args.row_chunks:
         cfg = dataclasses.replace(cfg, row_chunks=args.row_chunks)
+    plan = None
     if args.budget_gb and not args.row_chunks:  # explicit --row-chunks wins
         # budget-driven sequence-axis plan: pick the chunk count (Eq. 7
         # along the token axis, per-device under --mesh) and engine from
@@ -131,7 +152,8 @@ def train_lm(args):
     ds = TokenDataset(TokenDatasetConfig(vocab=cfg.vocab, seq_len=args.seq,
                                          batch=args.batch, seed=args.seed))
     os.makedirs(args.out, exist_ok=True)
-    log = []
+    steplog = StepLog("train")
+    audit = None
     t0 = time.time()
     for step in range(args.steps):
         hb = ds.batch_at(step)
@@ -146,21 +168,31 @@ def train_lm(args):
                             0, 1, (args.batch, args.seq, cfg.d_model))
                         .astype(np.float32)),
                      "tokens": batch["tokens"], "labels": batch["labels"]}
+        if step == 0:
+            # audit before the first call: donated state buffers are
+            # still live, and lowering only reads avals anyway
+            # record-only source: the LM plan prices the activation /
+            # sequence-chunk term alone (params + opt state are outside
+            # the seq-budget solve), so no gate compares it to the full
+            # step's measured peak
+            audit = _audit_step(step_fn, plan,
+                                {"arch": cfg.name, "batch": args.batch,
+                                 "seq": args.seq}, state, batch,
+                                source="train_step_lm")
         state, metrics = step_fn(state, batch)
         if step % args.log_every == 0 or step == args.steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
             m["elapsed_s"] = round(time.time() - t0, 1)
-            log.append(m)
-            print(f"step {step:5d} loss {m['loss']:.4f} "
-                  f"ce {m.get('ce', 0):.4f} gnorm {m['grad_norm']:.2f} "
-                  f"({m['elapsed_s']}s)")
+            steplog.log(m)
     if args.save:
         store.save(args.out, args.steps, state["params"], state["opt"],
                    {"arch": cfg.name})
-    with open(os.path.join(args.out, "train_log.json"), "w") as f:
-        json.dump(log, f, indent=2)
-    return log
+    steplog.dump(os.path.join(args.out, "train_log.json"),
+                 arch=cfg.name, mode="lm",
+                 plan=plan.to_dict() if plan is not None else None,
+                 plan_audit=audit)
+    return steplog.records
 
 
 def train_cnn(args):
@@ -230,22 +262,25 @@ def train_cnn(args):
         n_classes=ccfg.n_classes, batch=batch,
         seed=args.seed))
     os.makedirs(args.out, exist_ok=True)
-    log = []
+    steplog = StepLog("train")
+    audit = None
     t0 = time.time()
     for step in range(args.steps):
         hb = ds.batch_at(step)
-        params, opt, loss, m = step_fn(params, opt,
-                                       jnp.asarray(hb["images"]),
-                                       jnp.asarray(hb["labels"]))
+        images = jnp.asarray(hb["images"])
+        labels = jnp.asarray(hb["labels"])
+        if step == 0:
+            audit = _audit_step(step_fn, plan,
+                                {"arch": ccfg.arch, "batch": batch},
+                                params, opt, images, labels)
+        params, opt, loss, m = step_fn(params, opt, images, labels)
         if step % args.log_every == 0 or step == args.steps - 1:
-            rec = {"step": step, "loss": float(loss),
-                   "elapsed_s": round(time.time() - t0, 1)}
-            log.append(rec)
-            print(f"step {step:5d} loss {rec['loss']:.4f} "
-                  f"({rec['elapsed_s']}s)")
-    with open(os.path.join(args.out, "train_log.json"), "w") as f:
-        json.dump(log, f, indent=2)
-    return log
+            steplog.log({"step": step, "loss": float(loss),
+                         "elapsed_s": round(time.time() - t0, 1)})
+    steplog.dump(os.path.join(args.out, "train_log.json"),
+                 arch=ccfg.arch, mode="cnn", plan=plan.to_dict(),
+                 plan_audit=audit)
+    return steplog.records
 
 
 def main():
@@ -286,11 +321,18 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")
+    add_obs_args(ap)
     args = ap.parse_args()
-    if args.arch in ("vgg16", "resnet50"):
-        train_cnn(args)
-    else:
-        train_lm(args)
+    configure_from_args(args, tool="train", arch=args.arch,
+                        preset=args.preset)
+    try:
+        with profiled(args):
+            if args.arch in ("vgg16", "resnet50"):
+                train_cnn(args)
+            else:
+                train_lm(args)
+    finally:
+        obs.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,134 @@
+"""repro.obs — zero-overhead-when-disabled telemetry.
+
+One module-level session gates everything:
+
+    from repro import obs
+
+    obs.configure(trace="run.jsonl", metrics="metrics.json",
+                  meta={"arch": "vgg16", "engine": "twophase"})
+    ...
+    obs.shutdown()          # writes the metrics dump, closes the trace
+
+Instrumentation sites call :func:`emit` / :func:`counter` / :func:`gauge`
+/ :func:`histogram` unconditionally.  When no session is active,
+``emit`` returns immediately and the metric constructors hand back the
+shared :data:`~repro.obs.metrics.NULL_METRIC` no-op — so a disabled run
+pays one attribute load and one truthiness check per call site, and
+*nothing* inside a jitted path: the executor hooks fire at trace time
+only (jit caches the trace), so the compiled step function is
+byte-identical with obs on or off.
+
+Registration is one call per layer (see ROADMAP "Observability"):
+the row-program executor, the serve scheduler and the launch CLIs all
+emit into whatever session is active; no plumbing of sink objects
+through call stacks.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from repro.obs.metrics import (METRICS_SCHEMA, Counter, Gauge, Histogram,
+                               MetricsRegistry, NULL_METRIC, merge_counts)
+from repro.obs.trace import TRACE_SCHEMA, Tracer, read_jsonl
+
+__all__ = [
+    "configure", "shutdown", "enabled", "session", "capture",
+    "emit", "span", "event", "counter", "gauge", "histogram",
+    "Tracer", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "NULL_METRIC", "merge_counts", "read_jsonl",
+    "TRACE_SCHEMA", "METRICS_SCHEMA",
+]
+
+
+class Session:
+    """An active obs session: a tracer plus a metrics registry."""
+
+    def __init__(self, trace: Optional[str] = None,
+                 metrics: Optional[str] = None,
+                 meta: Optional[dict] = None):
+        self.tracer = Tracer(trace, meta=meta)
+        self.metrics = MetricsRegistry()
+        self.metrics_path = metrics
+
+    def close(self) -> None:
+        if self.metrics_path:
+            self.metrics.dump(self.metrics_path)
+        self.tracer.close()
+
+
+#: the one active session, or None (disabled mode)
+_session: Optional[Session] = None
+
+
+def configure(trace: Optional[str] = None, metrics: Optional[str] = None,
+              meta: Optional[dict] = None) -> Session:
+    """Open a session.  Replaces (and closes) any active one."""
+    global _session
+    if _session is not None:
+        _session.close()
+    _session = Session(trace=trace, metrics=metrics, meta=meta)
+    return _session
+
+
+def shutdown() -> None:
+    """Close the active session, writing the metrics dump if configured."""
+    global _session
+    if _session is not None:
+        _session.close()
+        _session = None
+
+
+def enabled() -> bool:
+    return _session is not None
+
+
+def session() -> Optional[Session]:
+    return _session
+
+
+@contextlib.contextmanager
+def capture(trace: Optional[str] = None, metrics: Optional[str] = None,
+            meta: Optional[dict] = None):
+    """Scoped session for tests and library callers: restores whatever
+    session (or none) was active before."""
+    global _session
+    prev = _session
+    _session = Session(trace=trace, metrics=metrics, meta=meta)
+    try:
+        yield _session
+    finally:
+        _session.close()
+        _session = prev
+
+
+# -- emission (the hot path: one global load + one None check) ----------
+
+def emit(kind: str, name: str, tick=None, **attrs) -> None:
+    s = _session
+    if s is not None:
+        s.tracer.emit(kind, name, tick, **attrs)
+
+
+def span(name: str, tick=None, **attrs) -> None:
+    emit("span", name, tick, **attrs)
+
+
+def event(name: str, tick=None, **attrs) -> None:
+    emit("event", name, tick, **attrs)
+
+
+def counter(name: str):
+    s = _session
+    return NULL_METRIC if s is None else s.metrics.counter(name)
+
+
+def gauge(name: str):
+    s = _session
+    return NULL_METRIC if s is None else s.metrics.gauge(name)
+
+
+def histogram(name: str):
+    s = _session
+    return NULL_METRIC if s is None else s.metrics.histogram(name)

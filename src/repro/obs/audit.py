@@ -1,0 +1,109 @@
+"""Plan audit: measured peak bytes per compiled step, next to the estimate.
+
+The Planner prices every plan (Eqs. 7-16: activations + boundary caches +
+optimiser state, or decode slots + pages for serve) but until this module
+nothing *measured* a step, so a pricing regression in ``residencize``,
+``kernelize`` or the paged-pool per-request formula would ship silently.
+
+Two measurement sources, recorded side by side with the plan's
+per-device estimate:
+
+``compiled``     XLA's own accounting from ``compiled.memory_analysis()``
+                 — temp + argument + output - aliased, i.e. what the
+                 executable reserves for one step.
+``live_buffers`` the sum of ``.nbytes`` over a live pytree (the serve
+                 cache pool, a residency host store) — what is actually
+                 resident right now.
+
+The record is keyed by the plan axes the estimate formulae branch on —
+``(engine, n_rows, residency, cache_kind)`` — so
+:mod:`repro.analysis.audit` can aggregate estimate-error per formula and
+flag drift.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.exec.plan import ExecutionPlan
+
+#: memory_analysis() fields worth keeping (missing ones recorded as 0)
+_MEM_FIELDS = ("temp_size_in_bytes", "argument_size_in_bytes",
+               "output_size_in_bytes", "alias_size_in_bytes",
+               "generated_code_size_in_bytes")
+
+
+def memory_metrics(mem) -> dict:
+    """Flatten a ``compiled.memory_analysis()`` object into plain ints,
+    plus the derived ``peak_bytes`` (temp + args + outputs - aliased)."""
+    d = {f: int(getattr(mem, f, 0) or 0) for f in _MEM_FIELDS}
+    d["peak_bytes"] = (d["temp_size_in_bytes"]
+                       + d["argument_size_in_bytes"]
+                       + d["output_size_in_bytes"]
+                       - d["alias_size_in_bytes"])
+    return d
+
+
+def measure_step(fn, *args) -> Optional[dict]:
+    """Lower+compile ``fn(*args)`` and return its memory metrics.
+
+    ``fn`` may already be jitted (has ``.lower``) or a plain callable.
+    Returns None when the backend has no memory analysis (some platforms
+    raise NotImplementedError) — the audit then records estimate-only.
+    """
+    import jax
+
+    try:
+        lowered = fn.lower(*args) if hasattr(fn, "lower") \
+            else jax.jit(fn).lower(*args)
+        return memory_metrics(lowered.compile().memory_analysis())
+    except NotImplementedError:
+        return None
+
+
+def live_bytes(tree) -> int:
+    """Bytes actually resident in a pytree of arrays (committed buffers)."""
+    import jax
+
+    return sum(int(getattr(leaf, "nbytes", 0))
+               for leaf in jax.tree.leaves(tree))
+
+
+def plan_audit(plan: ExecutionPlan, measured: dict, source: str,
+               extra: Optional[dict] = None,
+               est_bytes: Optional[int] = None) -> dict:
+    """Build (and emit, when a session is active) one audit record.
+
+    ``measured`` must contain ``peak_bytes``; ``source`` names the
+    measurement path (``train_step`` / ``serve_pool`` / ``dryrun``) so
+    the analysis side can apply a per-source tolerance — XLA's temp
+    accounting for a fused train step is much looser than the exact
+    byte-count of a cache pool we allocated ourselves.  ``est_bytes``
+    overrides the default per-device estimate when the measurement is
+    global (a sharded pool's ``.nbytes``) or targets a different term
+    (a host-resident pool vs the ``host_bytes`` extra).
+    """
+    est = int(est_bytes) if est_bytes is not None \
+        else int(plan.est_bytes_per_device or plan.est_bytes or 0)
+    peak = int(measured.get("peak_bytes", 0))
+    rec = {
+        "source": source,
+        "engine": plan.engine,
+        "n_rows": plan.n_rows,
+        "residency": (plan.residency.describe()
+                      if plan.residency is not None else "device"),
+        "cache_kind": plan.get("cache_kind", ""),
+        "est_bytes_per_device": est,
+        "measured": measured,
+        "ratio": (peak / est) if est else None,
+    }
+    if extra:
+        rec.update(extra)
+
+    from repro import obs
+    obs.emit("plan_audit", source, **rec)
+    obs.gauge(f"audit.{source}.est_bytes").set(est)
+    obs.gauge(f"audit.{source}.measured_peak_bytes").set(peak)
+    if rec["ratio"] is not None:
+        obs.gauge(f"audit.{source}.ratio").set(rec["ratio"])
+    return rec

@@ -1,0 +1,59 @@
+"""Shared obs wiring for the launch CLIs.
+
+Every driver (`launch.train`, `launch.serve`, `launch.dryrun`) takes the
+same three flags:
+
+  --trace PATH        write the span/event/audit stream as JSONL
+  --metrics-out PATH  write the metrics-registry dump on exit
+  --jax-profile DIR   also capture a jax.profiler trace into DIR
+
+Passing either of the first two opens the module-level obs session; with
+neither, the session stays closed and every hook in the executors is a
+no-op (the zero-overhead default).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro import obs
+
+
+def add_obs_args(ap) -> None:
+    ap.add_argument("--trace", default="",
+                    help="write a schema-versioned JSONL span/event trace "
+                         "(rows, transfers, scheduler ticks, plan audits) "
+                         "to this path")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics-registry dump (counters / "
+                         "gauges / histogram summaries) to this path on "
+                         "exit")
+    ap.add_argument("--jax-profile", default="",
+                    help="also capture a jax.profiler trace into this "
+                         "directory (requires --trace or --metrics-out)")
+
+
+def configure_from_args(args, **meta) -> bool:
+    """Open an obs session if the CLI asked for one.  Returns enabled."""
+    if not (args.trace or args.metrics_out):
+        return False
+    obs.configure(trace=args.trace or None,
+                  metrics=args.metrics_out or None, meta=meta)
+    return True
+
+
+@contextlib.contextmanager
+def profiled(args):
+    """jax.profiler capture scoped over the run when --jax-profile is
+    set (and obs is on — profiling without a sink to cross-reference
+    would be unanchored)."""
+    active = bool(getattr(args, "jax_profile", "")) and obs.enabled()
+    if active:
+        import jax
+        jax.profiler.start_trace(args.jax_profile)
+    try:
+        yield
+    finally:
+        if active:
+            import jax
+            jax.profiler.stop_trace()

@@ -1,0 +1,77 @@
+"""Metrics-backed step log for the launch CLIs.
+
+Replaces the trainers' ad-hoc ``print`` + bare-list ``train_log.json``
+with one object that does all three jobs per logged step:
+
+* keeps the per-step record (old keys unchanged — ``step``, ``loss``,
+  ``elapsed_s``, plus whatever the step function returned),
+* prints the same human line the trainers always printed,
+* feeds the active obs session: a ``train_step`` span per record and a
+  histogram per numeric metric — so ``--metrics-out`` summarises a run
+  without any consumer parsing the log file.
+
+``dump`` writes the schema-versioned envelope
+``{"schema": 1, ..., "steps": [<old records>]}``; :func:`load_steps`
+reads both that and the pre-PR bare-list layout, so existing consumers
+keep working either way.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List, Optional
+
+from repro import obs
+
+#: version of the train_log.json envelope (bump on breaking change)
+STEPLOG_SCHEMA = 1
+
+
+def _line(rec: dict) -> str:
+    """The trainers' historical step line, chosen by which keys exist."""
+    if "grad_norm" in rec:       # LM trainer
+        return (f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+                f"ce {rec.get('ce', 0):.4f} "
+                f"gnorm {rec['grad_norm']:.2f} "
+                f"({rec['elapsed_s']}s)")
+    return (f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+            f"({rec['elapsed_s']}s)")
+
+
+class StepLog:
+    """Per-step record list + console line + obs emission."""
+
+    def __init__(self, prefix: str = "train"):
+        self.prefix = prefix
+        self.records: List[dict] = []
+
+    def log(self, rec: dict, echo: bool = True) -> dict:
+        self.records.append(rec)
+        if echo:
+            print(_line(rec))
+        obs.span(f"{self.prefix}_step", tick=rec.get("step"),
+                 **{k: v for k, v in rec.items() if k != "step"})
+        obs.counter(f"{self.prefix}.steps_logged").inc()
+        for k, v in rec.items():
+            if k != "step" and isinstance(v, (int, float)):
+                obs.histogram(f"{self.prefix}.{k}").observe(v)
+        return rec
+
+    def dump(self, path: str, **header) -> None:
+        with open(path, "w") as f:
+            json.dump({"schema": STEPLOG_SCHEMA, **header,
+                       "steps": self.records}, f, indent=2)
+
+
+def load_steps(path: str) -> List[dict]:
+    """Read a train log in either layout: the schema-1 envelope or the
+    pre-PR bare list of step records."""
+    with open(path) as f:
+        d = json.load(f)
+    if isinstance(d, list):
+        return d
+    schema = d.get("schema")
+    if schema != STEPLOG_SCHEMA:
+        raise ValueError(f"train log {path!r} has schema {schema!r}; "
+                         f"this reader understands {STEPLOG_SCHEMA}")
+    return d["steps"]

@@ -43,6 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serve.cache_pool import CachePool, make_pool
 from repro.serve.engine import ServeEngine
 from repro.serve.request import Phase, Request, RequestState
@@ -104,6 +105,8 @@ class ServeReport:
     slo: Optional[SLO] = None
     slot_history: Dict[int, List[int]] = dataclasses.field(
         default_factory=dict)
+    events: List[dict] = dataclasses.field(default_factory=list)
+    plan_audit: Optional[dict] = None
 
     @property
     def total_generated(self) -> int:
@@ -114,6 +117,17 @@ class ServeReport:
             if s.rid == rid:
                 return list(s.generated)
         raise KeyError(rid)
+
+    def timeline(self, start: float = 0.0,
+                 end: Optional[float] = None) -> List[dict]:
+        """The per-tick event stream (admission / prefill chunks / decode
+        cohorts / preemptions / page traffic), in emission order, in the
+        tracer's record schema (``{"kind", "name", "tick", "attrs"}``) —
+        so a report and a ``--trace`` JSONL of the same run line up
+        record-for-record.  ``start``/``end`` bound the tick range."""
+        return [e for e in self.events
+                if e.get("tick", 0) >= start
+                and (end is None or e.get("tick", 0) <= end)]
 
     def latency_ticks(self) -> List[float]:
         """Per-request arrival -> completion, in ticks (queueing included)."""
@@ -188,11 +202,38 @@ class Scheduler:
         self.max_active = 0
         self.n_preempted = 0
         self.decode_batch = int(pool.plan.get("decode_batch", 0) or 0)
+        #: per-tick event stream in the tracer's record schema — always
+        #: kept (simulator scale), mirrored into the obs session when one
+        #: is active; ``ServeReport.timeline()`` exports it
+        self.events: List[dict] = []
         #: round-robin cohort order over decoding slots
         self._rotation: List[int] = []
         # last sampled token per slot; free slots hold 0 and their rows'
         # outputs are discarded (static-shape continuous batching)
         self.last_token = np.zeros(pool.n_slots, np.int32)
+
+    # ------------------------------------------------------------------
+    def _emit(self, name: str, **attrs) -> None:
+        tick = float(self.tick)
+        rec = {"kind": "event", "name": name,
+               "tick": int(tick) if tick.is_integer() else tick}
+        if attrs:
+            rec["attrs"] = attrs
+        self.events.append(rec)
+        obs.emit("event", name, self.tick, **attrs)
+        obs.counter(f"serve.{name}").inc()
+
+    def _free_pages(self) -> Optional[int]:
+        pages = getattr(self.pool, "pages", None)
+        return None if pages is None else pages.n_free
+
+    def _page_delta(self, name: str, before: Optional[int],
+                    **attrs) -> None:
+        """Emit a page alloc/grow/free event when the pool's free-page
+        count moved across an operation (paged pools only)."""
+        after = self._free_pages()
+        if before is not None and after != before:
+            self._emit(name, pages=abs(after - before), free=after, **attrs)
 
     # ------------------------------------------------------------------
     def _queued(self) -> List[RequestState]:
@@ -221,17 +262,26 @@ class Scheduler:
         st.finish_tick = self.tick
         if self.walltime_fn is not None:
             st.finish_wall = self.walltime_fn()
+        free0 = self._free_pages()
         self.pool.release(st.slot)
+        self._emit("finish", rid=st.rid, slot=st.slot,
+                   generated=st.n_generated,
+                   latency=self.tick - st.request.arrival)
+        self._page_delta("page_free", free0, rid=st.rid)
         if st.slot in self._rotation:
             self._rotation.remove(st.slot)
 
-    def _preempt(self, st: RequestState) -> None:
+    def _preempt(self, st: RequestState, reason: str = "priority") -> None:
         """Evict an admitted request back to QUEUED.  Its slot/pages are
         freed and its generated tokens dropped — a later re-admission
         replays the exact same stream (sampling is keyed on (seed, step)),
         so preemption costs latency, never determinism.  TTFT keeps the
         first emission."""
+        free0 = self._free_pages()
         self.pool.release(st.slot)
+        self._emit("preempt", rid=st.rid, slot=st.slot, reason=reason,
+                   phase=st.phase.name.lower())
+        self._page_delta("page_free", free0, rid=st.rid)
         if st.slot in self._rotation:
             self._rotation.remove(st.slot)
         st.slot = -1
@@ -253,6 +303,7 @@ class Scheduler:
     # admission
     # ------------------------------------------------------------------
     def _admit(self, st: RequestState) -> bool:
+        free0 = self._free_pages()
         slot = self.pool.acquire(st.rid, seq_len=self._prompt_tokens(
             st.request))
         if slot is None:
@@ -260,6 +311,10 @@ class Scheduler:
         st.slot = slot
         st.phase = Phase.PREFILL
         st.admit_tick = self.tick
+        self._emit("admit", rid=st.rid, slot=slot,
+                   prompt=st.request.prompt_len,
+                   priority=st.request.priority)
+        self._page_delta("page_alloc", free0, rid=st.rid)
         if self.preemptible_prefill:
             # one row chunk per tick; the engine call runs when the last
             # chunk's tick completes (step() drives _prefill_advance)
@@ -276,6 +331,8 @@ class Scheduler:
         logits, cache, st.prefill_chunks = self.engine.prefill(st.request)
         self.pool.write(st.slot, cache)
         self.n_prefills += 1
+        self._emit("prefill", rid=st.rid, slot=st.slot,
+                   chunks=st.prefill_chunks)
         if not self.preemptible_prefill:
             self.tick += 1.0  # one engine call (chunk ticks counted already
             #                   by _prefill_advance in preemptible mode)
@@ -302,6 +359,8 @@ class Scheduler:
         st = min(pre, key=lambda s: (-s.request.priority, s.admit_tick,
                                      s.request.arrival, s.rid))
         st.prefill_left -= 1
+        self._emit("prefill_chunk", rid=st.rid, slot=st.slot,
+                   left=st.prefill_left)
         self.tick += 1.0
         if st.prefill_left <= 0:
             self._run_prefill(st)
@@ -334,6 +393,7 @@ class Scheduler:
     def _grow_or_preempt(self, st: RequestState) -> bool:
         """Page capacity for ``st``'s next token, evicting other decoders
         under page pressure.  False if ``st`` itself got impossible."""
+        free0 = self._free_pages()
         while not self.pool.grow(st.slot):
             victim = self._victim([d for d in self._decoding()
                                    if d is not st])
@@ -342,7 +402,9 @@ class Scheduler:
                     f"request {st.rid}: page pool exhausted with no "
                     f"preemption candidates — the plan's n_pages cannot "
                     f"hold one max-length request; raise n_pages/budget")
-            self._preempt(victim)
+            self._preempt(victim, reason="page_pressure")
+            free0 = self._free_pages()  # the eviction's pages fund the grow
+        self._page_delta("page_grow", free0, rid=st.rid, slot=st.slot)
         return True
 
     def _decode_once(self) -> None:
@@ -371,6 +433,9 @@ class Scheduler:
                 cohort = self._decoding()
         if not cohort:
             return
+        self._emit("decode", width=len(cohort),
+                   cohort=sorted(st.slot for st in cohort),
+                   full_pool=slots is None)
         if slots is None:
             view = self.pool.decode_view()
             logits, view = self.engine.decode_step(self.last_token, view)
@@ -384,7 +449,9 @@ class Scheduler:
             # rotate: this cohort goes to the back, then warm the next one
             self._rotation = ([s for s in self._rotation if s not in slots]
                               + [s for s in slots if s in self._rotation])
-            self.pool.prefetch(self._rotation[: self.decode_batch])
+            nxt = self._rotation[: self.decode_batch]
+            self.pool.prefetch(nxt)
+            self._emit("cohort_prefetch", slots=list(nxt))
             row = {s: i for i, s in enumerate(slots)}
         self.n_decode_steps += 1
         self.tick += 1.0
@@ -431,7 +498,8 @@ class Scheduler:
             n_preempted=self.n_preempted,
             prefetch_hits=self.pool.prefetch_hits, slo=self.slo,
             slot_history={i: list(h)
-                          for i, h in enumerate(self.pool.history)})
+                          for i, h in enumerate(self.pool.history)},
+            events=list(self.events))
 
 
 def serve(params, cfg, requests: Sequence[Request], *,
@@ -487,4 +555,25 @@ def serve(params, cfg, requests: Sequence[Request], *,
                        walltime_fn=walltime_fn,
                        preemptible_prefill=preemptible_prefill,
                        slo=slo).run()
+    if obs.enabled():
+        # plan audit: what the pool actually holds vs what for_serve
+        # priced.  Pool buffers are allocated from the plan's own slot
+        # and page formulae, so the ratio should sit near 1.0 — drift
+        # means a pricing regression in decode_slot_bytes / page_bytes /
+        # a registered cache-bytes fn.  ``.nbytes`` is global even on
+        # sharded arrays, so compare against the global estimate; a
+        # host-resident pool holds the FULL bytes the ``host_bytes``
+        # extra prices (the device estimate is only the transit set).
+        from repro.obs.audit import live_bytes, plan_audit
+        shards = max(1, int((plan.est_bytes or 0)
+                            // max(1, plan.est_bytes_per_device or 1)))
+        host = int(plan.get("host_bytes", 0) or 0)
+        est = host * shards if host else int(plan.est_bytes or 0)
+        measured = {"peak_bytes": live_bytes(pool.caches),
+                    "live_buffer_bytes": live_bytes(pool.caches)}
+        report.plan_audit = plan_audit(
+            plan, measured, "serve_pool",
+            extra={"n_slots": pool.n_slots,
+                   "audited_term": "host_bytes" if host else "est_bytes"},
+            est_bytes=est)
     return report, plan

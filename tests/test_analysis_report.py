@@ -1,0 +1,165 @@
+"""Analysis-layer tests: the markdown table builders in
+repro.analysis.report (previously untested) and the plan-audit
+aggregation/gating in repro.analysis.audit."""
+
+import json
+
+import pytest
+
+from repro.analysis import report
+from repro.analysis.audit import (
+    TOLERANCES, audit_table, check, load_records, summarize,
+)
+
+
+# ---------------------------------------------------------------------------
+# report: formatters
+# ---------------------------------------------------------------------------
+
+
+def test_fmt_bytes():
+    assert report.fmt_bytes(None) == "-"
+    assert report.fmt_bytes(512) == "512.0B"
+    assert report.fmt_bytes(2048) == "2.0KiB"
+    assert report.fmt_bytes(3 * 2**20) == "3.0MiB"
+    assert report.fmt_bytes(5 * 2**30) == "5.0GiB"
+    assert report.fmt_bytes(2 * 2**40) == "2.0TiB"
+
+
+def test_fmt_s():
+    assert report.fmt_s(None) == "-"
+    assert report.fmt_s(2.5) == "2.50s"
+    assert report.fmt_s(0.0042) == "4.20ms"
+    assert report.fmt_s(7e-6) == "7.0us"
+
+
+# ---------------------------------------------------------------------------
+# report: table builders
+# ---------------------------------------------------------------------------
+
+
+def _ok_rec(arch="llama", shape="train_4k", mesh="16x16"):
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "status": "ok",
+        "hlo_arg_bytes_per_chip": 2**30, "hlo_temp_bytes_per_chip": 2**30,
+        "hlo_hlo_flops_per_chip": 1.5e12, "hlo_coll_bytes_per_chip": 2**20,
+        "hlo_model_flops_global": 2.0e14,
+        "t_lower_s": 1.0, "t_compile_s": 2.0, "n_chips": 256,
+        "analytic": {"flops_per_chip": 1.0e12, "t_compute_s": 0.01,
+                     "t_memory_s": 0.002, "t_collective_s": 3e-4,
+                     "bottleneck": "compute"},
+    }
+
+
+def _skip_rec(arch="moe", shape="serve_8k", mesh="16x16"):
+    return {"arch": arch, "shape": shape, "mesh": mesh,
+            "status": "skipped", "reason": "decode shape N/A for encoder"}
+
+
+def test_dryrun_table_rows_and_mesh_filter():
+    recs = [_ok_rec(), _skip_rec(), _ok_rec(mesh="2x16x16")]
+    md = report.dryrun_table(recs, "16x16")
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch | shape | status ")
+    assert len(lines) == 4  # header + separator + one ok + one skip
+    assert "| llama | train_4k | ok | 2.0GiB | 1.50e+12 | 1.0MiB "in md
+    assert "SKIP (documented)" in md
+    # the other-mesh record is excluded
+    assert "2x16x16" not in md
+
+
+def test_roofline_table_ratio_and_notes():
+    md = report.roofline_table([_ok_rec()], "16x16")
+    # MODEL_FLOPS/HLO = 2e14 / (1e12 * 256)
+    assert "| 0.78 |" in md
+    assert "**compute**" in md
+    assert "10.00ms" in md and "2.00ms" in md
+    # skipped/error rows never reach the roofline
+    assert len(report.roofline_table([_skip_rec()], "16x16")
+               .splitlines()) == 2
+
+
+def test_note_covers_every_bottleneck():
+    for bn, frag in [("compute", "arithmetic intensity"),
+                     ("memory", "streaming bound"),
+                     ("collective", "TP traffic")]:
+        rec = _ok_rec()
+        rec["analytic"]["bottleneck"] = bn
+        assert frag in report._note(rec)
+
+
+def test_skips_table_dedupes():
+    recs = [_skip_rec(), _skip_rec(), _skip_rec(arch="ssm")]
+    md = report.skips_table(recs)
+    assert len(md.splitlines()) == 4  # header + sep + 2 unique rows
+    assert "decode shape N/A" in md
+
+
+# ---------------------------------------------------------------------------
+# audit: aggregation + tolerance gate
+# ---------------------------------------------------------------------------
+
+
+def _audit_rec(source="train_step", engine="twophase_h", ratio=1.5,
+               **over):
+    rec = {"source": source, "engine": engine, "n_rows": 2,
+           "residency": "device", "cache_kind": "",
+           "est_bytes_per_device": 1000,
+           "measured": {"peak_bytes": int(1000 * ratio)}, "ratio": ratio}
+    rec.update(over)
+    return rec
+
+
+def test_summarize_groups_by_plan_axes():
+    rows = summarize([_audit_rec(ratio=1.4), _audit_rec(ratio=1.6),
+                      _audit_rec(engine="overlap_h", ratio=1.2)])
+    assert len(rows) == 2
+    by_engine = {r["engine"]: r for r in rows}
+    assert by_engine["twophase_h"]["count"] == 2
+    assert by_engine["twophase_h"]["ratio_min"] == 1.4
+    assert by_engine["twophase_h"]["ratio_max"] == 1.6
+    assert by_engine["overlap_h"]["tolerance"] == TOLERANCES["train_step"]
+
+
+def test_check_flags_out_of_tolerance_sources():
+    ok = summarize([_audit_rec(ratio=1.5),
+                    _audit_rec(source="serve_pool", engine="serve_pool",
+                               cache_kind="paged_kv", ratio=1.0)])
+    assert check(ok) == []
+    # serve_pool is the tight gate: 20% drift must trip it
+    bad = summarize([_audit_rec(source="serve_pool", engine="serve_pool",
+                                cache_kind="paged_kv", ratio=1.2)])
+    problems = check(bad)
+    assert len(problems) == 1 and "paged_kv" in problems[0]
+    # dryrun and the LM train path are record-only: no ratio gates them
+    assert check(summarize([_audit_rec(source="dryrun", ratio=90.0)])) == []
+    assert check(summarize([_audit_rec(source="train_step_lm",
+                                       engine="seq_chunked",
+                                       ratio=40.0)])) == []
+
+
+def test_audit_table_renders_groups():
+    md = audit_table(summarize([_audit_rec()]))
+    assert "| train_step | twophase_h | 2 | device | - |" in md
+    assert "1.500" in md and "[0.25, 4.0]" in md
+
+
+def test_load_records_from_jsonl_and_artefacts(tmp_path):
+    # a trace JSONL with one audit record among spans
+    trace = tmp_path / "t.jsonl"
+    trace.write_text("\n".join([
+        json.dumps({"schema": 1, "kind": "header"}),
+        json.dumps({"kind": "span", "name": "fp_row", "tick": 0}),
+        json.dumps({"kind": "plan_audit", "name": "train_step",
+                    "attrs": _audit_rec()}),
+    ]) + "\n")
+    # a train_log.json envelope carrying its audit
+    log = tmp_path / "train_log.json"
+    log.write_text(json.dumps(
+        {"schema": 1, "steps": [],
+         "plan_audit": _audit_rec(engine="overlap_h")}))
+    # an artefact without an audit contributes nothing
+    empty = tmp_path / "serve.json"
+    empty.write_text(json.dumps({"summary": {}, "plan_audit": None}))
+    recs = load_records([str(trace), str(log), str(empty)])
+    assert sorted(r["engine"] for r in recs) == ["overlap_h", "twophase_h"]
