@@ -1,0 +1,135 @@
+"""Measured-cost planner: predicted vs measured step time, autotune, and
+plan-cache launch latency.
+
+The headline row replays ``examples/large_image_cnn.py``'s scenario — the
+28 MiB budget at H=768 that no device-resident engine fits — resolved
+through the calibrated :class:`CostTable` roofline chooser instead of the
+static host-before-recompute order, then times the actual train step
+under the chosen plan and records the predicted-vs-measured ratio.  The
+ratio is the cost model's honesty metric, tracked across PRs the same
+way the plan-audit byte ratios are.
+
+Also measured: the calibration microbenchmark's primitive costs (the
+table itself), ``Planner.autotune_kernel``'s tile search on a small
+trunk, and the plan cache's solve-vs-hit launch latency — the hot path
+the cache exists for.
+
+Standalone (prints BENCH JSON):
+  PYTHONPATH=src python -m benchmarks.bench_costmodel
+"""
+
+import json
+import os
+import tempfile
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.exec import (
+    CostTable, Planner, build_apply, cached_plan,
+)
+from repro.models.cnn.vgg import init_vgg16, vgg16_modules
+
+# the example's motivating scenario (examples/large_image_cnn.py)
+BATCH = 2
+H = 768
+BUDGET = 28 * 2**20
+
+
+def run() -> List[dict]:
+    rows = []
+
+    t0 = time.perf_counter()
+    table = CostTable.calibrate(iters=2)
+    rows.append({
+        "name": "costmodel/calibrate",
+        "us_per_call": round((time.perf_counter() - t0) * 1e6, 1),
+        "fingerprint": table.fingerprint,
+        "flops_per_s": round(table.flops_per_s, 1),
+        "h2d_bytes_per_s": round(table.h2d_bytes_per_s, 1),
+        "d2h_bytes_per_s": round(table.d2h_bytes_per_s, 1),
+        "row_overhead_us": round(table.row_overhead_us, 2),
+    })
+
+    # -- predicted vs measured under the 28 MiB budget ------------------
+    mods = vgg16_modules(width_mult=0.25, n_stages=3)
+    shape = (H, H, 3)
+    plan = Planner.for_budget(mods, shape, BATCH, BUDGET, cost_table=table)
+    assert plan.feasible and plan.get("cost_model"), plan.describe()
+    _, params = init_vgg16(jax.random.PRNGKey(0), shape, width_mult=0.25,
+                           n_classes=4, n_stages=3)
+    apply_fn = build_apply(mods, plan)
+
+    def loss(p, xx):
+        return jnp.sum(apply_fn(p, xx) ** 2)
+
+    step = jax.jit(jax.value_and_grad(loss))
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, H, H, 3))
+    measured_us = time_fn(step, params["trunk"], x, iters=1, warmup=1)
+    predicted_us = float(plan.get("predicted_step_us", 0.0))
+    rows.append({
+        "name": f"costmodel/vgg_h{H}_28mib",
+        "us_per_call": round(measured_us, 1),
+        "engine": plan.engine,
+        "n_rows": plan.n_rows,
+        "residency": (plan.residency.describe()
+                      if plan.residency is not None else "device"),
+        "predicted_step_us": round(predicted_us, 1),
+        "pred_vs_measured_ratio": round(predicted_us / max(measured_us,
+                                                           1e-9), 3),
+        "cost_table_version": plan.get("cost_table_version", ""),
+    })
+
+    # -- KernelSpec autotune on a small trunk ---------------------------
+    small_shape = (32, 32, 3)
+    small_mods, _ = init_vgg16(jax.random.PRNGKey(0), small_shape,
+                               width_mult=0.125, n_classes=4, n_stages=2)
+    planner = Planner(small_mods, small_shape, 1)
+    t0 = time.perf_counter()
+    tuned = planner.autotune_kernel(planner.plan("overlap", 2))
+    rows.append({
+        "name": "costmodel/autotune_conv_h32",
+        "us_per_call": round((time.perf_counter() - t0) * 1e6, 1),
+        "engine": tuned.engine,
+        "block_h": tuned.kernel.block_h if tuned.kernel else 0,
+        "best_candidate_us": float(tuned.get("autotune_us", 0.0)),
+        "fallback": tuned.get("kernel_fallback", ""),
+    })
+
+    # -- plan cache: solve+store vs hit (launch latency) ----------------
+    with tempfile.TemporaryDirectory() as d:
+        table.save(os.path.join(d, "cost_table.json"))
+        fields = dict(mode="bench", arch="vgg16", image=H, batch=BATCH,
+                      budget=BUDGET, fingerprint=table.fingerprint)
+
+        def solve():
+            return Planner.for_budget(mods, shape, BATCH, BUDGET,
+                                      cost_table=table)
+
+        t0 = time.perf_counter()
+        _, hit0, _ = cached_plan(d, fields, solve, table.version())
+        miss_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        cached, hit1, _ = cached_plan(d, fields, solve, table.version())
+        hit_us = (time.perf_counter() - t0) * 1e6
+        assert not hit0 and hit1
+        assert cached.to_dict() == plan.to_dict()
+        rows.append({
+            "name": "costmodel/plan_cache_hit",
+            "us_per_call": round(hit_us, 1),
+            "solve_and_store_us": round(miss_us, 1),
+            "speedup_ratio": round(miss_us / max(hit_us, 1e-9), 1),
+        })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

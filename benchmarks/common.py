@@ -29,11 +29,13 @@ def _units_for(key: str) -> str:
     return ""
 
 
-def normalize_row(bench: str, row: Dict) -> Dict:
+def normalize_row(bench: str, row: Dict, wall_s: float = None) -> Dict:
     """One bench row -> the BENCH_summary shape: (bench, name, key
     metric + units, everything else under extras).  The key metric is
     ``us_per_call`` when timed, else the first numeric derived value —
-    the same priority :func:`emit`'s CSV leads with."""
+    the same priority :func:`emit`'s CSV leads with.  ``wall_s`` records
+    the whole bench module's wall time on each of its rows, so the
+    summary carries how long every table/figure took to produce."""
     rest = {k: v for k, v in row.items() if k not in ("name", "us_per_call")}
     if row.get("us_per_call", "") != "":
         metric, value = "us_per_call", float(row["us_per_call"])
@@ -44,8 +46,11 @@ def normalize_row(bench: str, row: Dict) -> Dict:
                 metric, value = k, v
                 break
         rest = {k: v for k, v in rest.items() if k != metric}
-    return {"bench": bench, "name": row["name"], "metric": metric,
-            "value": value, "units": _units_for(metric), "extras": rest}
+    out = {"bench": bench, "name": row["name"], "metric": metric,
+           "value": value, "units": _units_for(metric), "extras": rest}
+    if wall_s is not None:
+        out["bench_wall_s"] = wall_s
+    return out
 
 
 def write_summary(path: str, benches: List[Dict]) -> None:

@@ -8,10 +8,15 @@ is machine-diffable across PRs.
 """
 
 import argparse
+import os
 import sys
 import time
 
 from benchmarks.common import emit, normalize_row, write_summary
+
+#: the summary lands at the repo root regardless of the invoking CWD, so
+#: the perf trajectory file is always found next to bench_serving.json
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODULES = [
     ("fig6_fig7_memory", "benchmarks.bench_memory"),
@@ -25,15 +30,18 @@ MODULES = [
     ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
     ("serving_continuous_batching", "benchmarks.bench_serving"),
     ("sharding_data_extent", "benchmarks.bench_sharding"),
+    ("costmodel_predicted_vs_measured", "benchmarks.bench_costmodel"),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
-    ap.add_argument("--summary", default="BENCH_summary.json",
-                    help="normalized cross-bench summary path "
-                         "('' disables); with --only it covers only the "
+    ap.add_argument("--summary",
+                    default=os.path.join(REPO_ROOT, "BENCH_summary.json"),
+                    help="normalized cross-bench summary path (default: "
+                         "BENCH_summary.json at the repo root; '' "
+                         "disables); with --only it covers only the "
                          "benches that ran")
     args = ap.parse_args()
     import importlib
@@ -48,8 +56,9 @@ def main() -> None:
             mod = importlib.import_module(modname)
             rows = mod.run()
             emit(rows)
-            summary.extend(normalize_row(tag, r) for r in rows)
-            print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+            dt = round(time.time() - t0, 2)
+            summary.extend(normalize_row(tag, r, wall_s=dt) for r in rows)
+            print(f"# {tag} done in {dt:.1f}s", file=sys.stderr)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"# {tag} FAILED: {type(e).__name__}: {e}",

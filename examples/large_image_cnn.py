@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.rowplan import omega_column, solve_n
-from repro.exec import ExecutionPlan, Planner, ResidencySpec, build_apply
+from repro.exec import (
+    CostTable, ExecutionPlan, Planner, ResidencySpec, build_apply,
+)
 from repro.models.cnn.vgg import head_apply, init_vgg16, vgg16_modules
 
 BATCH = 2
@@ -49,11 +51,19 @@ def main():
     assert not device_only.feasible, "budget should reject device-only plans"
     print(f"\ndevice-only best at H={H}: {device_only.describe()}")
 
-    # the full solve residencizes: boundary caches move to host memory
-    plan = Planner.for_budget(mods, shape, BATCH, BUDGET)
+    # the full solve goes through the measured-cost roofline chooser: a
+    # calibrated CostTable ranks every feasible (engine, N, residency)
+    # candidate by predicted step time instead of the static Table-I
+    # order, and still residencizes — no device-resident plan fits
+    table = CostTable.calibrate(iters=1)
+    plan = Planner.for_budget(mods, shape, BATCH, BUDGET, cost_table=table)
     assert plan.feasible and plan.residency is not None
     print(f"residencized:             {plan.describe()}")
     print(f"  -> {plan.get('residencized')}")
+    print(f"  cost model: {plan.get('cost_model')}")
+    print(f"  predicted step: {plan.get('predicted_step_us'):.0f} us "
+          f"(table {table.fingerprint}, version "
+          f"{plan.get('cost_table_version')})")
 
     # a logged plan replays to the same policy on any host
     plan = ExecutionPlan.from_json(plan.to_json())

@@ -158,11 +158,34 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="exit 1 when any gated source's ratio leaves "
                          "its tolerance band")
+    ap.add_argument("--cost-table-out", default="",
+                    help="seed/update a CostTable at this path from the "
+                         "loaded audit records: per-(source, engine, "
+                         "residency, cache_kind) median measured/"
+                         "estimated ratios fold into the table the "
+                         "Planner's roofline chooser prices copies with")
     args = ap.parse_args()
     records = load_records(args.paths)
     rows = summarize(records)
     print(f"## Plan audit: {len(records)} records, {len(rows)} groups\n")
     print(audit_table(rows))
+    if args.cost_table_out:
+        import os
+
+        from repro.exec.costmodel import CostTable, hardware_fingerprint
+        base = None
+        if os.path.exists(args.cost_table_out):
+            try:
+                base = CostTable.load(args.cost_table_out)
+            except (ValueError, KeyError, json.JSONDecodeError):
+                base = None  # stale schema / corrupt: start fresh
+        if base is None:
+            base = CostTable(fingerprint=hardware_fingerprint())
+        table = base.seed_from_audit(records)
+        table.save(args.cost_table_out)
+        print(f"\ncost table: {args.cost_table_out} "
+              f"({len(table.ratios)} ratio groups, "
+              f"version {table.version()})")
     problems = check(rows)
     if problems:
         print(f"\n{len(problems)} tolerance violations:")

@@ -23,9 +23,14 @@ Typical use::
     apply_fn = build_apply(modules, plan)   # sharded when plan.mesh is set
 """
 
+from repro.exec.costmodel import (
+    CostTable, hardware_fingerprint, load_or_calibrate, register_cost_table,
+    resolve_cost_table, trunk_fwd_flops,
+)
 from repro.exec.plan import (
     ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, ResidencySpec,
 )
+from repro.exec.plancache import PlanCache, cached_plan, plan_cache_key
 from repro.exec.planner import (
     BUDGET_PREFERENCE, CNN_ENGINES, PALLAS_ALTERNATE, PALLAS_ENGINES,
     RESIDENCY_ENGINES, Planner, kernelize_plan, segment_row_capacity,
@@ -48,4 +53,7 @@ __all__ = [
     "RowProgram", "make_rowprog_apply",
     "CNN_ENGINES", "BUDGET_PREFERENCE", "PALLAS_ALTERNATE",
     "PALLAS_ENGINES", "RESIDENCY_ENGINES", "segment_row_capacity",
+    "CostTable", "hardware_fingerprint", "load_or_calibrate",
+    "register_cost_table", "resolve_cost_table", "trunk_fwd_flops",
+    "PlanCache", "cached_plan", "plan_cache_key",
 ]

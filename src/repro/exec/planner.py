@@ -77,6 +77,15 @@ def _offloads(residency: Optional[ResidencySpec]) -> bool:
     return residency is not None and residency.default != "device" \
         and all(p != "device" for _, p in residency.placements)
 
+
+def _count_solve() -> None:
+    """Bump the ``planner.solves`` obs counter (a no-op without an active
+    obs session).  Every public solve entry point calls this, which is
+    what lets CI assert "plan-cache hit => zero planner solves" from the
+    metrics dump alone."""
+    from repro import obs
+    obs.counter("planner.solves").inc()
+
 #: lax engine -> its pallas-backed alternate with the SAME call signature
 #: (base and overlap both map to overlap_pallas: the kernel's row tiling is
 #: internal, so its full-tensor apply is a drop-in for either)
@@ -181,6 +190,25 @@ def _pallas_infeasible(target: str, plan: ExecutionPlan, spec: KernelSpec,
     return f"engine {plan.engine!r} has no pallas alternate", {}
 
 
+#: pallas engine -> candidate_tiles() enumeration kind
+_TILE_KIND = {"overlap_pallas": "conv", "seq_swa_pallas": "swa",
+              "seq_ssd_pallas": "ssd"}
+
+
+def _tile_candidates(target: str, plan: ExecutionPlan) -> tuple:
+    """The deterministic tile search space for ``target`` against this
+    plan's geometry — one enumeration (``repro.kernels.ops.
+    candidate_tiles``) shared by kernelize's retile pass and
+    :meth:`Planner.autotune_kernel`, so both walk the same candidates in
+    the same tie-break order."""
+    from repro.kernels.ops import candidate_tiles
+    kind = _TILE_KIND[target]
+    if kind == "conv":
+        h = plan.in_shape[0] if plan.in_shape else 0
+        return candidate_tiles(kind, h_out=h)
+    return candidate_tiles(kind, seq=int(plan.get("seq", 0)))
+
+
 def kernelize_plan(plan: ExecutionPlan, spec, modules: Optional[Sequence]
                    = None, vmem_limit: int = PALLAS_VMEM_LIMIT
                    ) -> ExecutionPlan:
@@ -193,10 +221,18 @@ def kernelize_plan(plan: ExecutionPlan, spec, modules: Optional[Sequence]
     keeps its lax engine (or, for an engine that is already pallas, flips
     the spec's backend to lax — every pallas engine carries the reference
     path internally) and records why under the ``kernel_fallback`` extra.
-    Estimates are untouched: kernel tiling changes *where* a row's working
-    set lives (VMEM vs HBM), not the Eq. 7 activation accounting.
+
+    A bare ``"pallas"`` string means "any feasible tiling": when the
+    default tiles are rejected, the deterministic ``candidate_tiles``
+    enumeration is searched and the first feasible candidate wins,
+    recorded under the ``kernel_retile`` extra.  An explicit
+    :class:`KernelSpec` pins its tiles exactly — infeasible means lax
+    fallback, never a silent re-tile.  Estimates are untouched: kernel
+    tiling changes *where* a row's working set lives (VMEM vs HBM), not
+    the Eq. 7 activation accounting.
     """
-    if isinstance(spec, str):
+    retile = isinstance(spec, str)
+    if retile:
         spec = KernelSpec(backend=spec)
     if spec.backend != "pallas":
         return dataclasses_replace(plan, kernel=spec)
@@ -206,12 +242,32 @@ def kernelize_plan(plan: ExecutionPlan, spec, modules: Optional[Sequence]
             plan, spec, f"engine {plan.engine!r} has no pallas alternate")
     reason, pricing = _pallas_infeasible(target, plan, spec, modules,
                                          vmem_limit)
+    if reason and retile:
+        for tiles in _tile_candidates(target, plan):
+            cand = dataclasses_replace(spec, **tiles)
+            if cand == spec:
+                continue  # the default already failed above
+            r2, p2 = _pallas_infeasible(target, plan, cand, modules,
+                                        vmem_limit)
+            if not r2:
+                out = dataclasses_replace(plan, engine=target, kernel=cand)
+                return out.with_extras(
+                    kernel_retile=(f"default tiling infeasible ({reason}); "
+                                   f"first feasible candidate "
+                                   f"{_fmt_tiles(tiles)}"),
+                    **p2)
+        return _kernel_fallback(
+            plan, spec, f"{reason}; no candidate tiling feasible either")
     if reason:
         return _kernel_fallback(plan, spec, reason)
     out = dataclasses_replace(plan, engine=target, kernel=spec)
     if pricing:
         out = out.with_extras(**pricing)
     return out
+
+
+def _fmt_tiles(tiles: dict) -> str:
+    return " ".join(f"{k}={v}" for k, v in sorted(tiles.items()))
 
 
 def _kernel_fallback(plan: ExecutionPlan, spec: KernelSpec,
@@ -411,6 +467,7 @@ class _ServePlannerMixin:
         multiple of the extent when ``n_slots`` is pinned explicitly, so
         the pool's slot axis always divides evenly).  Paged/quant pools
         and decode-state residency are single-host for now."""
+        _count_solve()
         known = serve_cache_kinds()
         if cache_kind not in known:
             raise KeyError(
@@ -514,7 +571,8 @@ class Planner(_ServePlannerMixin):
 
     def __init__(self, modules: Sequence, in_shape: Tuple[int, int, int],
                  batch: int, dtype_bytes: int = 4, xi: int = 0,
-                 n_max: int = 64, mesh: Optional[MeshSpec] = None):
+                 n_max: int = 64, mesh: Optional[MeshSpec] = None,
+                 cost_table=None):
         self.modules = list(modules)
         self.in_shape = tuple(in_shape)
         self.batch = batch
@@ -522,6 +580,10 @@ class Planner(_ServePlannerMixin):
         self.xi = xi                      # params/grads/workspace constant
         self.n_max = n_max
         self.mesh = mesh
+        #: optional repro.exec.costmodel.CostTable: when set, budget-driven
+        #: selection ranks feasible candidates by predicted step time
+        #: (roofline) instead of the static Table-I order
+        self.cost_table = cost_table
         shards = mesh.batch_extent if mesh is not None else 1
         if shards > 1 and batch % shards:
             raise ValueError(
@@ -658,6 +720,85 @@ class Planner(_ServePlannerMixin):
         return kernelize_plan(plan, spec, modules=self.modules,
                               vmem_limit=vmem_limit)
 
+    def autotune_kernel(self, plan: ExecutionPlan, *, time_fn=None,
+                        vmem_limit: int = PALLAS_VMEM_LIMIT,
+                        base_spec: Optional[KernelSpec] = None
+                        ) -> ExecutionPlan:
+        """Search the KernelSpec tile geometry for ``plan``'s pallas
+        alternate and return the plan kernelized with the fastest tiling.
+
+        Candidates come from the same deterministic enumeration kernelize
+        retiles over (``repro.kernels.ops.candidate_tiles``), filtered by
+        the same ``vmem_bytes`` / halo / ``good_tiling`` pricers
+        (:func:`_pallas_infeasible`), then *timed*: ``time_fn(candidate
+        plan) -> us`` (default: an AOT ``measure_step`` wall-clock of the
+        planner's own trunk forward at batch 1).  The minimum measured
+        time wins; exact ties break toward the earlier candidate —
+        enumeration order IS the tie-break, so the search is
+        deterministic for a deterministic timer.  The winning plan
+        records the search under the ``autotune`` / ``autotune_us``
+        extras; when no candidate passes the pricers the plan falls back
+        to lax with the usual ``kernel_fallback`` reason."""
+        spec0 = base_spec or plan.kernel or KernelSpec(backend="pallas",
+                                                       interpret=True)
+        spec0 = dataclasses_replace(spec0, backend="pallas")
+        target = PALLAS_ALTERNATE.get(plan.engine, plan.engine)
+        if target not in PALLAS_ENGINES:
+            return _kernel_fallback(
+                plan, spec0,
+                f"engine {plan.engine!r} has no pallas alternate")
+        feasible = []
+        seen = set()
+        for tiles in _tile_candidates(target, plan):
+            spec = dataclasses_replace(spec0, **tiles)
+            if spec in seen:
+                continue
+            seen.add(spec)
+            reason, pricing = _pallas_infeasible(target, plan, spec,
+                                                 self.modules, vmem_limit)
+            if not reason:
+                feasible.append((spec, pricing, tiles))
+        if not feasible:
+            return _kernel_fallback(
+                plan, spec0,
+                f"autotune: no tile candidate feasible for {target}")
+        timer = time_fn if time_fn is not None \
+            else self._default_kernel_timer()
+        scored = []
+        for idx, (spec, pricing, tiles) in enumerate(feasible):
+            cand = dataclasses_replace(plan, engine=target, kernel=spec)
+            scored.append((float(timer(cand)), idx, cand, pricing, tiles))
+        scored.sort(key=lambda t: (t[0], t[1]))
+        us, _, cand, pricing, tiles = scored[0]
+        return cand.with_extras(
+            autotune=(f"timed {len(feasible)} feasible of "
+                      f"{len(seen)} tile candidates for {target}; best "
+                      f"{_fmt_tiles(tiles)} at {us:.1f}us"),
+            autotune_us=round(us, 3), **pricing)
+
+    def _default_kernel_timer(self):
+        """Wall-clock timer over this planner's own trunk: synthesized
+        params, batch-1 forward, timed via the AOT ``measure_step`` path
+        (compile once, median of the executed iterations)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.exec.registry import build_apply
+        from repro.models.cnn.layers import init_trunk
+        from repro.obs.audit import measure_step
+
+        params, _ = init_trunk(self.modules, jax.random.PRNGKey(0),
+                               self.in_shape)
+        x = jnp.zeros((1,) + self.in_shape, jnp.float32)
+
+        def timer(cand: ExecutionPlan) -> float:
+            fn = build_apply(self.modules,
+                             dataclasses_replace(cand, mesh=None))
+            m = measure_step(fn, params, x, time_iters=2) or {}
+            return float(m.get("wall_us", 0.0))
+
+        return timer
+
     def resolve(self, request: PlanRequest) -> ExecutionPlan:
         """Turn a config-level :class:`PlanRequest` into a plan.  A
         ``request.mesh`` string ("data=8[,model=2]") overrides the
@@ -666,12 +807,14 @@ class Planner(_ServePlannerMixin):
         ``request.residency`` ("host"/"recompute"/"device") pins the
         boundary-cache residency policy (estimates re-priced for the
         carry-based engines)."""
+        _count_solve()
         if request.mesh:
             mesh = MeshSpec.parse(request.mesh)
             if mesh != self.mesh:
                 return Planner(self.modules, self.in_shape, self.batch,
                                self.dtype_bytes, self.xi, self.n_max,
-                               mesh=mesh).resolve(
+                               mesh=mesh,
+                               cost_table=self.cost_table).resolve(
                                    dataclasses_replace(request, mesh=""))
         plan = self._resolve(request, ResidencySpec.parse(request.residency))
         if request.kernel:
@@ -717,7 +860,8 @@ class Planner(_ServePlannerMixin):
         return self.for_budget(self.modules, self.in_shape, self.batch,
                                budget, dtype_bytes=self.dtype_bytes,
                                xi=self.xi, n_max=self.n_max, mesh=self.mesh,
-                               residency=residency)
+                               residency=residency,
+                               cost_table=self.cost_table)
 
     # ------------------------------------------------------------------
     # budget-driven solving
@@ -826,24 +970,41 @@ class Planner(_ServePlannerMixin):
                    xi: int = 0, n_max: int = 64,
                    candidates: Sequence[str] = BUDGET_PREFERENCE,
                    mesh: Optional[MeshSpec] = None,
-                   residency: Optional[ResidencySpec] = None
-                   ) -> ExecutionPlan:
+                   residency: Optional[ResidencySpec] = None,
+                   cost_table=None) -> ExecutionPlan:
         """Auto-select strategy *and* granularity under a byte budget.
 
-        Tries ``candidates`` in order of increasing runtime overhead
-        (Table I / Fig. 8) and returns the first feasible plan.  If no
-        device-resident plan fits (and the caller didn't pin a residency
-        policy), the :meth:`residencize` pass retries the carry-based
-        engines with their boundary caches moved off device — the budgets
-        the device-only solve rejects are exactly the ones host offload /
-        recompute exist for.  Failing that too, returns the infeasible
-        plan with the smallest estimate so the caller can see how far over
-        budget it is.  With ``mesh=`` both the batch and the budget are
-        divided over the data axis (per-device solve); the returned plan
-        carries the mesh.
+        Without a ``cost_table``, tries ``candidates`` in order of
+        increasing runtime overhead (Table I / Fig. 8) and returns the
+        first feasible plan.  If no device-resident plan fits (and the
+        caller didn't pin a residency policy), the :meth:`residencize`
+        pass retries the carry-based engines with their boundary caches
+        moved off device — the budgets the device-only solve rejects are
+        exactly the ones host offload / recompute exist for.  Failing
+        that too, returns the infeasible plan with the smallest estimate
+        so the caller can see how far over budget it is.
+
+        With a ``cost_table`` (a :class:`repro.exec.costmodel.CostTable`)
+        the static orders are replaced by a measured roofline: every
+        feasible candidate — each engine under the pinned residency,
+        plus the host- and recompute-offloaded carry engines when no
+        residency is pinned — is priced via :meth:`predict_plan_us`
+        (device-only compute vs offload copy bytes vs O(N^2) recompute
+        FLOPs) and the minimum predicted step time wins, ties broken by
+        the static preference order then smaller N.  The decision is
+        recorded under the ``cost_model`` / ``predicted_step_us`` /
+        ``cost_table_version`` extras (the ``kernel_fallback`` /
+        ``residencized`` pattern).
+
+        With ``mesh=`` both the batch and the budget are divided over the
+        data axis (per-device solve); the returned plan carries the mesh.
         """
+        _count_solve()
         planner = cls(modules, in_shape, batch, dtype_bytes, xi, n_max,
-                      mesh=mesh)
+                      mesh=mesh, cost_table=cost_table)
+        if cost_table is not None:
+            return planner._for_budget_costed(budget, candidates,
+                                              residency, cost_table)
         best: Optional[ExecutionPlan] = None
         for engine in candidates:
             p = planner.solve(engine, budget, residency=residency)
@@ -854,6 +1015,117 @@ class Planner(_ServePlannerMixin):
         if residency is None:
             return planner.residencize(best, budget)
         return best
+
+    # ------------------------------------------------------------------
+    # measured-cost selection (roofline over a calibrated CostTable)
+    # ------------------------------------------------------------------
+    def predict_plan_us(self, plan: ExecutionPlan, table) -> dict:
+        """Roofline step-time prediction for ``plan`` under ``table``:
+        ``{"us", "compute_us", "copy_us", "flops", "copy_bytes"}``.
+
+        Compute side: one forward + ~2x backward over the trunk
+        (:func:`repro.exec.costmodel.trunk_fwd_flops`), plus one extra
+        forward for the checkpointed engines (segment recompute), plus
+        the replicated-halo fraction for the OverL family, plus the
+        O(N^2) forward-chain term — ``fwd * (N-1)/2`` — under recompute
+        residency.  Copy side: the 2PS SD volume crosses the PCIe both
+        ways under host residency, scaled by the audit-seeded
+        byte-honesty ratio for the matching plan group.  The step pays
+        ``max(compute, copy)`` (prefetch hides copies behind the adjacent
+        row) plus per-row dispatch overhead."""
+        from repro.exec.costmodel import audit_ratio_key, trunk_fwd_flops
+
+        fwd = trunk_fwd_flops(self.modules, self.in_shape, self.dev_batch)
+        flops = 3.0 * fwd
+        n = max(1, plan.n_rows)
+        engine = plan.engine
+        if engine in INNER_STRATEGY:  # segment recompute: one extra FP
+            flops += fwd
+        if engine in ("overlap", "overlap_h", "overlap_pallas") and n > 1:
+            halo = _rp.overlap_halo_bytes(self.modules, self.in_shape,
+                                          self.dev_batch, n,
+                                          self.dtype_bytes)
+            feat = sum(_rp.feature_bytes(self.modules, self.in_shape,
+                                         self.dev_batch, self.dtype_bytes))
+            if feat:
+                flops += 3.0 * fwd * (halo / feat)  # redundant halo compute
+        d2h = h2d = 0.0
+        res = plan.residency
+        if _offloads(res) and engine in RESIDENCY_ENGINES:
+            policies = {res.default} | {p for _, p in res.placements}
+            sd = _rp.twophase_cache_bytes(self.modules, self.in_shape,
+                                          self.dev_batch, n,
+                                          self.dtype_bytes)
+            if "host" in policies:
+                d2h += sd   # FP exports every boundary cache ...
+                h2d += sd   # ... and BP prefetches it back
+            if "recompute" in policies:
+                # regenerating row r's caches replays rows 0..r-1's FP:
+                # sum over importing rows ~= fwd * (N-1)/2
+                flops += fwd * (n - 1) / 2.0
+        key = audit_ratio_key("train_step", engine,
+                              res.describe() if res is not None
+                              else "device", "")
+        scale = table.ratio(key)
+        compute = table.compute_us(flops)
+        copy = table.copy_us(d2h * scale, h2d * scale)
+        return {"us": max(compute, copy) + table.row_overhead_us * n,
+                "compute_us": compute, "copy_us": copy, "flops": flops,
+                "copy_bytes": d2h + h2d}
+
+    def _for_budget_costed(self, budget: int, candidates: Sequence[str],
+                           residency: Optional[ResidencySpec],
+                           table) -> ExecutionPlan:
+        """Collect every feasible candidate plan, rank by predicted step
+        time, record the decision — the measured replacement for both the
+        Table-I order and residencize's host-before-recompute order."""
+        pool = []
+        for engine in candidates:
+            p = self.solve(engine, budget, residency=residency)
+            if p is not None:
+                pool.append(p)
+        device_pool = list(pool)
+        if residency is None:
+            # the offload alternatives enter the SAME ranked pool instead
+            # of a fixed host-then-recompute retry order
+            for policy in ("host", "recompute"):
+                spec = ResidencySpec(default=policy)
+                for engine in RESIDENCY_ENGINES:
+                    p = self.solve(engine, budget, residency=spec)
+                    if p is not None:
+                        pool.append(p)
+        feasible = [p for p in pool if p.feasible]
+        if not feasible:
+            best = min(device_pool, key=lambda p: p.est_bytes)
+            if residency is None:
+                return self.residencize(best, budget)
+            return best
+        pref = {e: i for i, e in enumerate(BUDGET_PREFERENCE)}
+        scored = [(self.predict_plan_us(p, table), p) for p in feasible]
+        scored.sort(key=lambda cp: (cp[0]["us"],
+                                    pref.get(cp[1].engine, len(pref)),
+                                    cp[1].n_rows))
+        cost, chosen = scored[0]
+        res_desc = chosen.residency.describe() \
+            if chosen.residency is not None else "device"
+        chosen = chosen.with_extras(
+            cost_model=(f"ranked {len(feasible)} feasible candidates by "
+                        f"roofline step time; {chosen.engine} N="
+                        f"{chosen.n_rows} ({res_desc}) predicted "
+                        f"{cost['us']:.1f}us (compute "
+                        f"{cost['compute_us']:.1f}us, copy "
+                        f"{cost['copy_us']:.1f}us)"),
+            predicted_step_us=round(cost["us"], 3),
+            cost_table_version=table.version())
+        if _offloads(chosen.residency) \
+                and not any(p.feasible for p in device_pool):
+            dev_budget = budget // self.shards
+            chosen = chosen.with_extras(residencized=(
+                f"no device-resident candidate fits budget {dev_budget} "
+                f"B/device; {chosen.residency.default} residency of "
+                f"{chosen.engine} boundary caches fits at "
+                f"N={chosen.n_rows}"))
+        return chosen
 
     # ------------------------------------------------------------------
     # sequence-side planning (the LM transplant)
@@ -888,6 +1160,7 @@ class Planner(_ServePlannerMixin):
         carries — recurrent states — are small, so the Eq. 7 estimate is
         not re-priced; the row-program executor still honours the
         placement)."""
+        _count_solve()
         shards = cls._seq_shards(mesh, batch)
         divisors = [n for n in range(1, min(n_max, seq_len) + 1)
                     if seq_len % n == 0]
@@ -922,6 +1195,7 @@ class Planner(_ServePlannerMixin):
         ``row_chunks`` when unconstrained).  ``mesh=`` makes the budget
         per-device, exactly as on the CNN side; ``residency=`` rides along
         (see :meth:`for_budget_seq`)."""
+        _count_solve()
         kinds = set(cfg.layer_kinds())
         if kinds & {"mamba", "mlstm", "slstm"}:
             engine, window = "seq_carry_scan", 0

@@ -21,6 +21,53 @@ from repro.kernels.ssd_chunk import ssd_scan as _ssd
 from repro.kernels.swa_attention import swa_attention as _swa
 
 
+#: deterministic tile search spaces, largest first — bigger tiles amortize
+#: grid-step dispatch, so enumeration order doubles as the tie-break order
+#: for both Planner.kernelize and Planner.autotune_kernel
+CONV_BLOCK_HS = (32, 16, 8, 4, 2, 1)
+SWA_BLOCKS = (256, 128, 64, 32, 16, 8)
+SSD_CHUNKS = (256, 128, 64, 32, 16, 8)
+
+
+def candidate_tiles(kind: str, *, h_out: int = 0, seq: int = 0) -> tuple:
+    """The ONE deterministic tile-candidate enumeration shared by
+    ``Planner.kernelize`` and ``Planner.autotune_kernel``: a tuple of
+    KernelSpec field dicts, in search/tie-break order.
+
+    ``kind``: ``"conv"`` yields ``{"block_h"}`` candidates (clamped to
+    ``h_out`` when given, deduped preserving order); ``"swa"`` yields
+    ``{"bq", "bk"}`` pairs satisfying the kernel's divisibility contract
+    against ``seq`` (``seq % bq == seq % bk == bq % bk == 0, bk <= bq``);
+    ``"ssd"`` yields ``{"chunk"}`` divisors of ``seq``.  Geometry only —
+    VMEM/alignment feasibility stays with the planner's pricers.
+    """
+    if kind == "conv":
+        out, seen = [], set()
+        for b in CONV_BLOCK_HS:
+            b = min(b, h_out) if h_out else b
+            if b >= 1 and b not in seen:
+                seen.add(b)
+                out.append({"block_h": b})
+        return tuple(out)
+    if kind == "swa":
+        out = []
+        for bq in SWA_BLOCKS:
+            if seq and (bq > seq or seq % bq):
+                continue
+            for bk in SWA_BLOCKS:
+                if bk > bq or bq % bk:
+                    continue
+                if seq and seq % bk:
+                    continue
+                out.append({"bq": bq, "bk": bk})
+        return tuple(out)
+    if kind == "ssd":
+        return tuple({"chunk": c} for c in SSD_CHUNKS
+                     if not seq or (c <= seq and seq % c == 0))
+    raise ValueError(f"unknown tile kind {kind!r}; "
+                     f"known: 'conv', 'swa', 'ssd'")
+
+
 def default_interpret() -> bool:
     """Environment default for ``pallas_call(interpret=...)``:
     ``REPRO_PALLAS_INTERPRET`` (0/1) when set, else interpret on anything

@@ -32,7 +32,7 @@ from repro.obs.cli import add_obs_args, configure_from_args
 def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
             out_dir: str, verbose: bool = True, overrides: dict = None,
             tag_suffix: str = "", kernel: str = "lax",
-            residency: str = "") -> dict:
+            residency: str = "", plan_cache: str = "") -> dict:
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -41,18 +41,35 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "fsdp": fsdp, "overrides": overrides or {},
            "status": "skipped"}
-    # the resolved row-centric execution plan is part of the record so a
-    # dry-run artefact fully determines how the step would execute — the
-    # plan is solved against THIS mesh (per-device batch), and its
-    # single-device projection rides along so the artefact replays on
-    # any host
-    plan = Planner.for_model(cfg, shape.batch, shape.seq,
-                             mesh=production_mesh_spec(multi_pod=multi_pod),
-                             residency=ResidencySpec.parse(residency))
-    if kernel:
-        # the chosen KernelSpec (or its lax fallback + reason) is part of
-        # the artefact: a dry-run record fully pins kernel policy too
-        plan = kernelize_plan(plan, kernel)
+
+    def _solve():
+        # the resolved row-centric execution plan is part of the record
+        # so a dry-run artefact fully determines how the step would
+        # execute — the plan is solved against THIS mesh (per-device
+        # batch), and its single-device projection rides along so the
+        # artefact replays on any host
+        plan = Planner.for_model(
+            cfg, shape.batch, shape.seq,
+            mesh=production_mesh_spec(multi_pod=multi_pod),
+            residency=ResidencySpec.parse(residency))
+        if kernel:
+            # the chosen KernelSpec (or its lax fallback + reason) is
+            # part of the artefact: a dry-run record fully pins kernel
+            # policy too
+            plan = kernelize_plan(plan, kernel)
+        return plan
+
+    if plan_cache:
+        from repro.exec.costmodel import hardware_fingerprint
+        from repro.exec.plancache import cached_plan
+        plan, hit, key = cached_plan(plan_cache, dict(
+            mode="dryrun", arch=arch, shape=shape_name, mesh=mesh_name,
+            kernel=kernel, residency=residency,
+            overrides=overrides or {},
+            fingerprint=hardware_fingerprint()), _solve)
+        rec["plan_cache_hit"] = hit
+    else:
+        plan = _solve()
     rec["exec_plan"] = plan.to_dict()
     rec["exec_plan_per_device"] = plan.per_device().to_dict()
     ok, why = shape_applicable(cfg, shape)
@@ -150,6 +167,8 @@ def main():
                     choices=["", "device", "host", "recompute"],
                     help="boundary-cache residency policy recorded on "
                          "the exec plan (artefacts replay it verbatim)")
+    from repro.exec.plancache import add_plan_cache_arg
+    add_plan_cache_arg(ap)
     add_obs_args(ap)
     args = ap.parse_args()
     overrides = _parse_overrides(args.set)
@@ -169,7 +188,8 @@ def main():
                 rec = run_one(arch, sh, mp, args.fsdp, args.out,
                               overrides=overrides, tag_suffix=args.tag,
                               kernel=args.kernel,
-                              residency=args.residency)
+                              residency=args.residency,
+                              plan_cache=args.plan_cache)
                 dt = time.time() - t0
                 print(f"{rec['status']:8s} {arch:24s} {sh:12s} "
                       f"{rec['mesh']:8s} {dt:7.1f}s "

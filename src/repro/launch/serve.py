@@ -83,7 +83,9 @@ def main():
                     help="write a serve artefact JSON (args + resolved "
                          "pool plan + cache kind/decode residency + "
                          "summary) to this directory")
+    from repro.exec.plancache import add_plan_cache_arg
     from repro.obs.cli import add_obs_args, configure_from_args, profiled
+    add_plan_cache_arg(ap)
     add_obs_args(ap)
     args = ap.parse_args()
 
@@ -149,7 +151,8 @@ def main():
                              decode_residency=args.decode_residency,
                              decode_batch=args.decode_batch,
                              preemptible_prefill=args.preemptible_prefill,
-                             slo=slo, walltime_fn=time.perf_counter)
+                             slo=slo, walltime_fn=time.perf_counter,
+                             plan_cache=args.plan_cache)
     wall = time.perf_counter() - t0
 
     print("pool plan:", plan.describe())

@@ -62,6 +62,30 @@ from repro.optim.adamw import (
 )
 
 
+def _resolve_plan(args, key_fields, solve):
+    """Resolve a plan through the persistent cache when ``--plan-cache``
+    is set, else solve directly.
+
+    ``solve(table)`` performs the actual planner solve; ``table`` is the
+    calibrated :class:`CostTable` under the cache directory (None without
+    a cache — behaviour then matches the static pre-cost-model path).  A
+    cache hit replays the stored plan JSON without calling ``solve`` at
+    all (zero planner solves, visible in the obs counters); a stale
+    cost-table version is a miss, so cached decisions never outlive the
+    measurements they were priced with."""
+    if not getattr(args, "plan_cache", ""):
+        return solve(None)
+    from repro.exec import cached_plan, load_or_calibrate
+    from repro.exec.costmodel import hardware_fingerprint
+    table = load_or_calibrate(args.plan_cache)
+    key_fields = dict(key_fields, fingerprint=hardware_fingerprint())
+    plan, hit, key = cached_plan(args.plan_cache, key_fields,
+                                 lambda: solve(table),
+                                 cost_version=table.version())
+    print(f"plan cache: {'hit' if hit else 'miss'} key={key}")
+    return plan
+
+
 def _audit_step(step_fn, plan, source_extra, *step_args,
                 source="train_step"):
     """Measure the compiled step's peak bytes against the plan estimate
@@ -99,9 +123,15 @@ def train_lm(args):
         # along the token axis, per-device under --mesh) and engine from
         # the layer pattern
         residency_spec = ResidencySpec.parse(args.residency)
-        plan = Planner.for_model(cfg, args.batch, args.seq,
-                                 budget=int(args.budget_gb * 2**30),
-                                 mesh=mesh_spec, residency=residency_spec)
+        plan = _resolve_plan(
+            args,
+            dict(mode="lm", arch=cfg.name, preset=args.preset,
+                 batch=args.batch, seq=args.seq, budget_gb=args.budget_gb,
+                 mesh=args.mesh, residency=args.residency),
+            lambda table: Planner.for_model(
+                cfg, args.batch, args.seq,
+                budget=int(args.budget_gb * 2**30),
+                mesh=mesh_spec, residency=residency_spec))
         if args.residency:
             # recorded policy only, like --kernel: the jitted LM step
             # executes cfg-level remat, not registry engines
@@ -233,7 +263,16 @@ def train_cnn(args):
         req = dataclasses.replace(req, residency=args.residency)
     # the paper's ξ: params + grads + optimizer state live beside activations
     xi = 3 * sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(params))
-    plan = Planner(mods, shape, batch, xi=xi, mesh=mesh_spec).resolve(req)
+    plan = _resolve_plan(
+        args,
+        dict(mode="cnn", arch=ccfg.arch, preset=args.preset,
+             image=ccfg.image, channels=ccfg.channels, batch=batch, xi=xi,
+             engine=req.engine, n_rows=req.n_rows,
+             budget_gb=req.budget_gb, n_segments=req.n_segments,
+             mesh=args.mesh or req.mesh, kernel=req.kernel,
+             residency=req.residency),
+        lambda table: Planner(mods, shape, batch, xi=xi, mesh=mesh_spec,
+                              cost_table=table).resolve(req))
     print("plan:", plan.describe())
     # plan.mesh makes build_apply wrap the engine in the data-parallel
     # shard wrapper; no sharding code in the trainer itself
@@ -321,6 +360,8 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")
+    from repro.exec.plancache import add_plan_cache_arg
+    add_plan_cache_arg(ap)
     add_obs_args(ap)
     args = ap.parse_args()
     configure_from_args(args, tool="train", arch=args.arch,

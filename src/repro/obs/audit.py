@@ -44,21 +44,47 @@ def memory_metrics(mem) -> dict:
     return d
 
 
-def measure_step(fn, *args) -> Optional[dict]:
+def measure_step(fn, *args, time_iters: int = 0) -> Optional[dict]:
     """Lower+compile ``fn(*args)`` and return its memory metrics.
 
     ``fn`` may already be jitted (has ``.lower``) or a plain callable.
     Returns None when the backend has no memory analysis (some platforms
     raise NotImplementedError) — the audit then records estimate-only.
+
+    ``time_iters > 0`` additionally *executes* the compiled step — one
+    warmup call, then ``time_iters`` timed iterations — and records the
+    median wall-clock under ``wall_us``.  This is the timing path the
+    KernelSpec autotuner scores candidates with: the same AOT executable
+    whose memory the audit measures, so time and bytes describe the same
+    compilation.  With timing requested the dict is returned even when
+    memory analysis is unavailable (``peak_bytes`` then 0).
     """
     import jax
 
     try:
         lowered = fn.lower(*args) if hasattr(fn, "lower") \
             else jax.jit(fn).lower(*args)
-        return memory_metrics(lowered.compile().memory_analysis())
+        compiled = lowered.compile()
     except NotImplementedError:
         return None
+    try:
+        out = memory_metrics(compiled.memory_analysis())
+    except NotImplementedError:
+        if not time_iters:
+            return None
+        out = {"peak_bytes": 0}
+    if time_iters:
+        import time as _time
+
+        jax.block_until_ready(compiled(*args))  # warmup / first dispatch
+        times = []
+        for _ in range(time_iters):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(compiled(*args))
+            times.append((_time.perf_counter() - t0) * 1e6)
+        times.sort()
+        out["wall_us"] = times[len(times) // 2]
+    return out
 
 
 def live_bytes(tree) -> int:

@@ -510,7 +510,8 @@ def serve(params, cfg, requests: Sequence[Request], *,
           n_pages: int = 0, decode_residency: str = "",
           decode_batch: int = 0, preemptible_prefill: bool = False,
           slo: Optional[SLO] = None,
-          walltime_fn: Optional[Callable[[], float]] = None):
+          walltime_fn: Optional[Callable[[], float]] = None,
+          plan_cache: str = ""):
     """One-call serving loop: plan the pool, build engine + pool +
     scheduler, run to completion.  Returns (report, plan).
 
@@ -527,7 +528,11 @@ def serve(params, cfg, requests: Sequence[Request], *,
     ``decode_residency="host"`` keeps decode state in host memory with
     the ``decode_batch`` cohort fetched one tick ahead (decode-state
     residency); ``preemptible_prefill`` / ``slo`` are scheduler policy
-    (see :class:`Scheduler` / :class:`SLO`)."""
+    (see :class:`Scheduler` / :class:`SLO`).
+
+    ``plan_cache`` (a directory) persists the resolved pool plan keyed
+    by the pool-geometry inputs + hardware fingerprint: a hit replays
+    the stored plan without re-running ``Planner.for_serve``."""
     from repro.exec.planner import Planner
     need = [r.prompt_len + r.max_new_tokens for r in requests]
     if cfg.frontend == "vision":
@@ -536,14 +541,33 @@ def serve(params, cfg, requests: Sequence[Request], *,
         max_len = max(need)
     if cache_kind == "paged_kv" and not avg_len:
         avg_len = -(-sum(need) // len(need))  # ceil of the traffic mean
-    # more slots than requests would only widen every decode step
-    plan = Planner.for_serve(cfg, max_len, budget=budget, enc_len=enc_len,
-                             n_slots=n_slots, mesh=mesh,
-                             n_max=max(1, min(256, len(requests))),
-                             cache_kind=cache_kind, page_size=page_size,
-                             avg_len=avg_len, n_pages=n_pages,
-                             decode_residency=decode_residency or None,
-                             decode_batch=decode_batch)
+    n_max = max(1, min(256, len(requests)))
+
+    def _solve():
+        # more slots than requests would only widen every decode step
+        return Planner.for_serve(cfg, max_len, budget=budget,
+                                 enc_len=enc_len, n_slots=n_slots,
+                                 mesh=mesh, n_max=n_max,
+                                 cache_kind=cache_kind,
+                                 page_size=page_size, avg_len=avg_len,
+                                 n_pages=n_pages,
+                                 decode_residency=decode_residency or None,
+                                 decode_batch=decode_batch)
+
+    if plan_cache:
+        from repro.exec.costmodel import hardware_fingerprint
+        from repro.exec.plancache import cached_plan
+        plan, hit, key = cached_plan(plan_cache, dict(
+            mode="serve", arch=cfg.name, max_len=max_len, budget=budget,
+            n_slots=n_slots, enc_len=enc_len,
+            mesh=mesh.describe() if mesh is not None else "",
+            cache_kind=cache_kind, page_size=page_size, avg_len=avg_len,
+            n_pages=n_pages, decode_residency=decode_residency or "",
+            decode_batch=decode_batch, n_max=n_max,
+            fingerprint=hardware_fingerprint()), _solve)
+        print(f"plan cache: {'hit' if hit else 'miss'} key={key}")
+    else:
+        plan = _solve()
     if mesh is not None and prefill_budget:
         # a request's chunked prefill runs unsharded on one device, so it
         # must fit the PER-DEVICE slice of the budget, like everything else

@@ -1,0 +1,437 @@
+"""Measured-cost planner tier: CostTable calibration / serialization /
+roofline, the costed for_budget chooser that replaces the static Table-I
+and host-before-recompute orders, the shared candidate-tile enumeration
+(kernelize retile + autotune), and the persistent plan cache."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import pytest
+
+from repro import obs
+from repro.exec import (
+    BUDGET_PREFERENCE, CostTable, ExecutionPlan, KernelSpec, PlanCache,
+    Planner, ResidencySpec, cached_plan, hardware_fingerprint,
+    load_or_calibrate, plan_cache_key, register_cost_table,
+    resolve_cost_table, trunk_fwd_flops,
+)
+from repro.exec.costmodel import (
+    COST_SCHEMA, COST_TABLE_FILENAME, _COST_TABLES, audit_ratio_key,
+)
+from repro.kernels.ops import CONV_BLOCK_HS, candidate_tiles
+from repro.models.cnn.vgg import init_vgg16, vgg16_modules
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+MODS, _ = init_vgg16(KEY, (32, 32, 3), width_mult=0.125, n_classes=4,
+                     n_stages=2)
+
+
+def _table(**kw) -> CostTable:
+    """A deterministic synthetic table (no live calibration)."""
+    base = dict(fingerprint="test:synthetic:x1", flops_per_s=1e9,
+                h2d_bytes_per_s=1e9, d2h_bytes_per_s=1e9,
+                row_overhead_us=1.0)
+    base.update(kw)
+    return CostTable(**base)
+
+
+# ---------------------------------------------------------------------------
+# CostTable: serialization, identity, seeding, roofline
+# ---------------------------------------------------------------------------
+
+
+def test_cost_table_round_trip_and_schema_gate(tmp_path):
+    t = _table(ratios=(("train_step/twophase/host/-", 1.5),))
+    path = str(tmp_path / COST_TABLE_FILENAME)
+    t.save(path)
+    t2 = CostTable.load(path)
+    assert t2 == t and t2.version() == t.version()
+    bad = t.to_dict()
+    bad["schema"] = COST_SCHEMA + 1
+    with pytest.raises(ValueError, match="schema"):
+        CostTable.from_dict(bad)
+
+
+def test_cost_table_version_tracks_content():
+    t = _table()
+    assert t.version() == _table().version()
+    assert t.version() != _table(flops_per_s=2e9).version()
+    assert t.version() != dataclasses.replace(
+        t, ratios=(("a/b/device/-", 1.1),)).version()
+
+
+def test_calibrate_measures_positive_costs():
+    t = CostTable.calibrate(matmul_dim=64, copy_bytes=1 << 16, iters=1)
+    assert t.fingerprint == hardware_fingerprint()
+    assert t.flops_per_s > 0 and t.row_overhead_us > 0
+    assert t.h2d_bytes_per_s > 0 and t.d2h_bytes_per_s > 0
+    assert t.sources == ("calibrate",)
+
+
+def test_seed_from_audit_takes_group_medians():
+    t = _table(ratios=(("old/group/device/-", 9.0),))
+    recs = [
+        {"source": "train_step", "engine": "twophase", "residency": "host",
+         "ratio": r} for r in (1.0, 4.0, 2.0)
+    ] + [{"source": "serve_pool", "engine": "serve_pool",
+          "cache_kind": "paged_kv", "ratio": 1.02},
+         {"source": "dryrun", "engine": "base", "ratio": None}]  # skipped
+    t2 = t.seed_from_audit(recs)
+    assert t2.ratio("train_step/twophase/host/-") == 2.0  # median
+    assert t2.ratio("serve_pool/serve_pool/device/paged_kv") == 1.02
+    assert t2.ratio("old/group/device/-") == 9.0  # merged, not replaced
+    assert "audit" in t2.sources
+    # idempotent source tagging
+    assert t2.seed_from_audit(recs).sources.count("audit") == 1
+
+
+def test_audit_ratio_key_defaults():
+    assert audit_ratio_key("train_step", "twophase", "", "") \
+        == "train_step/twophase/device/-"
+    assert audit_ratio_key("serve_pool", "serve_pool", "host", "quant_kv") \
+        == "serve_pool/serve_pool/host/quant_kv"
+
+
+def test_trunk_fwd_flops_conv_exact_and_batch_linear():
+    from repro.core.rowplan import shape_chain
+    mods = vgg16_modules(width_mult=0.125, n_stages=1)
+    shapes = shape_chain(mods, (16, 16, 3))
+    # first module is a Conv: 2*k*k*Cin MACs per output element
+    m, sout = mods[0], shapes[1]
+    expected0 = 2.0 * m.k * m.k * 3 * sout[2] * sout[0] * sout[1]
+    total1 = trunk_fwd_flops(mods, (16, 16, 3), 1)
+    assert total1 > expected0 > 0
+    assert trunk_fwd_flops(mods, (16, 16, 3), 4) == pytest.approx(4 * total1)
+
+
+def test_predict_step_us_roofline_and_ratio_scaling():
+    key = "train_step/twophase/host/-"
+    t = _table(flops_per_s=1e6, h2d_bytes_per_s=1e6, d2h_bytes_per_s=1e6,
+               row_overhead_us=2.0, ratios=((key, 2.0),))
+    # compute 100us vs copy 300us -> roofline takes the copy side
+    us = t.predict_step_us(flops=100.0, d2h_bytes=100.0, h2d_bytes=200.0,
+                           n_rows=4)
+    assert us == pytest.approx(max(100.0, 300.0) + 2.0 * 4)
+    # the audit ratio scales the copy term only
+    us2 = t.predict_step_us(flops=100.0, d2h_bytes=100.0, h2d_bytes=200.0,
+                            n_rows=4, key=key)
+    assert us2 == pytest.approx(600.0 + 8.0)
+    # compute-bound case ignores the ratio entirely
+    assert t.predict_step_us(flops=1e4, d2h_bytes=1.0, n_rows=1, key=key) \
+        == pytest.approx(1e4 + 2.0)
+
+
+def test_registry_resolves_before_calibration(tmp_path):
+    fp = hardware_fingerprint()
+    t = _table(fingerprint=fp)
+    try:
+        register_cost_table(t)
+        assert resolve_cost_table() is t
+        assert load_or_calibrate(str(tmp_path)) is t
+        # registered tables never touch the persistence directory
+        assert not os.path.exists(str(tmp_path / COST_TABLE_FILENAME))
+    finally:
+        _COST_TABLES.pop(fp, None)
+
+
+def test_load_or_calibrate_persists_and_reloads(tmp_path):
+    d = str(tmp_path)
+    t1 = load_or_calibrate(d)
+    assert os.path.exists(os.path.join(d, COST_TABLE_FILENAME))
+    t2 = load_or_calibrate(d)
+    assert t2 == t1  # second launch loads the first launch's measurements
+    # a foreign-fingerprint table on disk is ignored -> recalibrate
+    _table(fingerprint="other:hw:x8").save(
+        os.path.join(d, COST_TABLE_FILENAME))
+    t3 = load_or_calibrate(d)
+    assert t3.fingerprint == hardware_fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# costed for_budget: roofline chooser replaces the static orders
+# ---------------------------------------------------------------------------
+
+SCENARIO = dict(modules=vgg16_modules(width_mult=0.25, n_stages=3),
+                in_shape=(768, 768, 3), batch=2, budget=28 * 2**20)
+
+
+def _for_budget(table, **kw):
+    s = dict(SCENARIO)
+    s.update(kw)
+    return Planner.for_budget(s["modules"], s["in_shape"], s["batch"],
+                              s["budget"], cost_table=table,
+                              **{k: v for k, v in s.items()
+                                 if k not in ("modules", "in_shape",
+                                              "batch", "budget")})
+
+
+def test_costed_chooser_records_decision_extras():
+    t = _table()
+    plan = _for_budget(t)
+    assert plan.feasible
+    assert "ranked" in plan.get("cost_model")
+    assert plan.get("predicted_step_us") > 0
+    assert plan.get("cost_table_version") == t.version()
+    # no device-resident plan fits 28 MiB at H=768: the chooser must
+    # still surface the residencize-style explanation
+    assert plan.residency is not None and plan.get("residencized")
+    # deterministic: same table -> bit-identical plan
+    assert _for_budget(t).to_dict() == plan.to_dict()
+
+
+def test_costed_chooser_flips_host_vs_recompute_with_measurements():
+    """The measured replacement for the static host-before-recompute
+    order: fast copies pick host offload, glacial copies + fast FLOPs
+    pick the O(N^2) recompute chain."""
+    fast_copy = _table(flops_per_s=1e9, h2d_bytes_per_s=1e12,
+                       d2h_bytes_per_s=1e12, row_overhead_us=0.0)
+    slow_copy = _table(flops_per_s=1e15, h2d_bytes_per_s=1e3,
+                       d2h_bytes_per_s=1e3, row_overhead_us=0.0)
+    host = _for_budget(fast_copy)
+    recomp = _for_budget(slow_copy)
+    assert host.residency.default == "host", host.describe()
+    assert recomp.residency.default == "recompute", recomp.describe()
+
+
+def test_costed_chooser_pinned_residency_and_device_budget():
+    t = _table()
+    # generous budget: a device-resident plan wins and records the ranking
+    plan = _for_budget(t, budget=2**40)
+    assert plan.feasible and plan.get("residencized") is None
+    assert plan.get("cost_model")
+    # pinned device residency + impossible budget: infeasible, no crash,
+    # and the chooser never silently offloads past the pin
+    tiny = _for_budget(t, budget=1, residency=ResidencySpec())
+    assert not tiny.feasible and not tiny.get("residencized")
+
+
+def test_for_budget_without_table_is_unchanged():
+    """cost_table=None keeps the static first-feasible path byte-for-byte
+    (backward compatibility for every existing caller)."""
+    plan = Planner.for_budget(MODS, (32, 32, 3), 2, 2**40)
+    assert plan.feasible and plan.engine == BUDGET_PREFERENCE[0]
+    assert plan.get("cost_model") is None \
+        and plan.get("predicted_step_us") is None
+
+
+def test_planner_solves_counter_counts_solves():
+    with obs.capture() as s:
+        Planner.for_budget(MODS, (32, 32, 3), 2, 2**40)
+        assert s.metrics.counters["planner.solves"].value >= 1
+
+
+# ---------------------------------------------------------------------------
+# candidate_tiles: the ONE deterministic enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_tiles_conv_clamped_dedup_order():
+    assert candidate_tiles("conv") == tuple(
+        {"block_h": b} for b in CONV_BLOCK_HS)
+    # clamping to a small h_out dedupes while preserving order
+    assert candidate_tiles("conv", h_out=4) == (
+        {"block_h": 4}, {"block_h": 2}, {"block_h": 1})
+    assert candidate_tiles("conv", h_out=4) \
+        == candidate_tiles("conv", h_out=4)
+
+
+def test_candidate_tiles_swa_and_ssd_divisibility():
+    for t in candidate_tiles("swa", seq=64):
+        bq, bk = t["bq"], t["bk"]
+        assert 64 % bq == 0 and 64 % bk == 0
+        assert bk <= bq and bq % bk == 0
+    assert {"bq": 64, "bk": 32} in candidate_tiles("swa", seq=64)
+    assert candidate_tiles("ssd", seq=96) == (
+        {"chunk": 32}, {"chunk": 16}, {"chunk": 8})
+    with pytest.raises(ValueError, match="unknown tile kind"):
+        candidate_tiles("matmul")
+
+
+# ---------------------------------------------------------------------------
+# kernelize retile (bare "pallas" = any feasible tiling)
+# ---------------------------------------------------------------------------
+
+
+def _vmem_at(planner, plan, block_h):
+    spec = KernelSpec(backend="pallas", interpret=True, block_h=block_h)
+    out = planner.kernelize(plan, spec)
+    assert out.engine == "overlap_pallas", out.get("kernel_fallback")
+    return out.get("kernel_vmem_bytes")
+
+
+def test_kernelize_bare_string_retiles_explicit_spec_does_not():
+    planner = Planner(MODS, (32, 32, 3), 1)
+    plan = planner.plan("overlap", 4)
+    # pick a VMEM limit that rejects the default block_h=8 working set
+    # but admits a smaller block (block_h=1 is halo-infeasible at k=3,
+    # so 2 is the smallest candidate with a working set at all)
+    v8, v2 = _vmem_at(planner, plan, 8), _vmem_at(planner, plan, 2)
+    assert v2 < v8
+    limit = (v8 + v2) // 2
+    retiled = planner.kernelize(plan, "pallas", vmem_limit=limit)
+    assert retiled.engine == "overlap_pallas"
+    assert retiled.kernel.block_h < 8
+    assert "first feasible candidate" in retiled.get("kernel_retile")
+    assert retiled.get("kernel_vmem_bytes") <= limit
+    # the same tiling pinned explicitly still refuses to re-tile
+    pinned = planner.kernelize(
+        plan, KernelSpec(backend="pallas", interpret=True), vmem_limit=limit)
+    assert pinned.kernel.backend == "lax"
+    assert "VMEM" in pinned.get("kernel_fallback")
+    # ... and when no candidate fits, the bare string falls back too
+    none = planner.kernelize(plan, "pallas", vmem_limit=max(1, v2 // 2))
+    assert none.kernel.backend == "lax"
+    assert "no candidate tiling feasible" in none.get("kernel_fallback")
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(block_h=st.sampled_from((1, 2, 4, 8, 16, 32)),
+           vmem_kb=st.sampled_from((1, 2, 8, 32, 128, 16384)))
+    def test_retile_feasibility_never_regresses(block_h, vmem_kb):
+        """Property: whenever ANY explicitly pinned tiling is feasible,
+        the bare-string retile search must also land on the pallas
+        engine — the shared enumeration can never lose a tiling the
+        planner would have accepted."""
+        planner = Planner(MODS, (32, 32, 3), 1)
+        plan = planner.plan("overlap", 4)
+        spec = KernelSpec(backend="pallas", interpret=True,
+                          block_h=block_h)
+        explicit = planner.kernelize(plan, spec,
+                                     vmem_limit=vmem_kb * 1024)
+        bare = planner.kernelize(plan, "pallas",
+                                 vmem_limit=vmem_kb * 1024)
+        if explicit.engine == "overlap_pallas":
+            assert bare.engine == "overlap_pallas"
+            assert bare.get("kernel_vmem_bytes") <= vmem_kb * 1024
+
+
+# ---------------------------------------------------------------------------
+# autotune_kernel: timed tile search, deterministic tie-break
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_ties_break_toward_enumeration_order():
+    planner = Planner(MODS, (32, 32, 3), 1)
+    plan = planner.plan("overlap", 4)
+    calls = []
+
+    def flat_timer(cand):
+        calls.append(cand.kernel.block_h)
+        return 1.0
+
+    tuned = planner.autotune_kernel(plan, time_fn=flat_timer)
+    assert tuned.engine == "overlap_pallas"
+    # constant timer -> the first feasible enumeration candidate wins
+    assert tuned.kernel.block_h == calls[0]
+    assert calls == sorted(calls, reverse=True)  # enumeration order
+    assert tuned.get("autotune_us") == 1.0
+    assert f"timed {len(calls)} feasible" in tuned.get("autotune")
+
+
+def test_autotune_minimum_measured_time_wins():
+    planner = Planner(MODS, (32, 32, 3), 1)
+    plan = planner.plan("overlap", 4)
+    tuned = planner.autotune_kernel(
+        plan, time_fn=lambda c: 0.5 if c.kernel.block_h == 2 else 2.0)
+    assert tuned.kernel.block_h == 2
+    assert tuned.get("autotune_us") == 0.5
+
+
+def test_autotune_fallbacks():
+    planner = Planner(MODS, (32, 32, 3), 1)
+    two = planner.autotune_kernel(planner.plan("twophase", 4))
+    assert two.kernel.backend == "lax"
+    assert "no pallas alternate" in two.get("kernel_fallback")
+    none = planner.autotune_kernel(planner.plan("overlap", 4),
+                                   time_fn=lambda c: 0.0, vmem_limit=1)
+    assert none.kernel.backend == "lax"
+    assert "no tile candidate feasible" in none.get("kernel_fallback")
+
+
+def test_autotune_default_timer_measures_trunk():
+    small_mods, _ = init_vgg16(KEY, (8, 8, 3), width_mult=0.125,
+                               n_classes=4, n_stages=1)
+    planner = Planner(small_mods, (8, 8, 3), 1)
+    tuned = planner.autotune_kernel(planner.plan("overlap", 2))
+    assert tuned.engine == "overlap_pallas"
+    assert tuned.get("autotune_us") > 0
+
+
+# ---------------------------------------------------------------------------
+# plan cache: hit / miss / stale, bit-identical replay, zero solves
+# ---------------------------------------------------------------------------
+
+
+def _plan() -> ExecutionPlan:
+    return Planner.for_budget(MODS, (32, 32, 3), 2, 2**40)
+
+
+def test_plan_cache_key_is_field_order_independent():
+    assert plan_cache_key(a=1, b="x") == plan_cache_key(b="x", a=1)
+    assert plan_cache_key(a=1) != plan_cache_key(a=2)
+    assert plan_cache_key(mesh=None) != plan_cache_key(mesh="data=8")
+
+
+def test_plan_cache_hit_miss_stale_and_counters(tmp_path):
+    plan = _plan()
+    with obs.capture() as s:
+        cache = PlanCache(str(tmp_path))
+        key = plan_cache_key(arch="vgg16", budget=2**40)
+        assert cache.lookup(key, "v1") is None
+        cache.store(key, plan, "v1", arch="vgg16")
+        got = cache.lookup(key, "v1")
+        assert got is not None and got.to_dict() == plan.to_dict()
+        # a cost-table version change invalidates the entry
+        assert cache.lookup(key, "v2") is None
+        counts = {n: c.value for n, c in s.metrics.counters.items()}
+        events = [r for r in s.tracer.records
+                  if r.get("name") == "plan_cache"]
+    assert counts["plancache.miss"] == 2
+    assert counts["plancache.hit"] == 1
+    assert counts["plancache.stale"] == 1
+    assert counts["plancache.store"] == 1
+    assert [e["attrs"]["hit"] for e in events] == [False, True, False]
+    assert events[-1]["attrs"]["stale"] == "cost_table"
+
+
+def test_plan_cache_restore_is_byte_identical(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    plan = _plan()
+    key = plan_cache_key(k=1)
+    path = cache.store(key, plan, "v1", meta_field="x")
+    with open(path, "rb") as f:
+        blob = f.read()
+    cache.store(key, plan, "v1", meta_field="x")
+    with open(path, "rb") as f:
+        assert f.read() == blob
+
+
+def test_cached_plan_skips_solve_on_hit(tmp_path):
+    solves = []
+
+    def solve():
+        solves.append(1)
+        return _plan()
+
+    p1, hit1, key1 = cached_plan(str(tmp_path), dict(a=1), solve, "v1")
+    assert not hit1 and len(solves) == 1
+    with obs.capture() as s:
+        p2, hit2, key2 = cached_plan(str(tmp_path), dict(a=1), solve, "v1")
+        counts = {n: c.value for n, c in s.metrics.counters.items()}
+    assert hit2 and key2 == key1 and len(solves) == 1
+    assert p2.to_dict() == p1.to_dict()
+    # the CI gate's invariant: a hit performs ZERO planner solves
+    assert "planner.solves" not in counts
+    # stale cost version re-solves and re-stores
+    _, hit3, _ = cached_plan(str(tmp_path), dict(a=1), solve, "v2")
+    assert not hit3 and len(solves) == 2

@@ -292,6 +292,44 @@ def test_memory_metrics_and_measure_step():
         + measured["output_size_in_bytes"] - measured["alias_size_in_bytes"])
 
 
+def test_measure_step_reports_wall_time_when_asked():
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jnp.ones((8, 8))
+    assert "wall_us" not in (measure_step(jax.jit(f), a, a) or {})
+    measured = measure_step(jax.jit(f), a, a, time_iters=2)
+    if measured is None:
+        pytest.skip("backend supports neither memory_analysis nor AOT timing")
+    assert measured["wall_us"] > 0
+
+
+@pytest.mark.parametrize("kind", ["full", "paged_kv", "quant_kv"])
+def test_measure_step_against_serve_pools(kind):
+    """measure_step prices the real decode step against every pool cache
+    kind: the jitted decode's argument bytes must cover the pool's live
+    dense view, and the peak must be positive — the serve-side audit the
+    cost model seeds from."""
+    from repro.configs import get_reduced
+    from repro.models.lm import model as LM
+    from repro.serve import ServeEngine, make_pool
+    cfg = get_reduced("qwen1_5_4b")
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    plan = Planner.for_serve(cfg, 16, n_slots=2, cache_kind=kind,
+                             page_size=8)
+    engine = ServeEngine(params, cfg, plan)
+    pool = make_pool(cfg, plan)
+    view = pool.decode_view()
+    tokens = jnp.zeros((pool.n_slots, 1), jnp.int32)
+    measured = measure_step(engine._decode, params, tokens, view)
+    if measured is None:
+        pytest.skip("backend has no memory_analysis")
+    assert measured["peak_bytes"] > 0
+    # the dense view is a decode argument, so the compiled argument
+    # bytes bound it from above (quant pools dequantise into the view)
+    assert measured["argument_size_in_bytes"] >= live_bytes(view)
+
+
 def test_plan_audit_record_and_emission():
     from repro.exec.plan import ExecutionPlan
     plan = ExecutionPlan(engine="twophase", n_rows=2, est_bytes=1000,
