@@ -27,12 +27,19 @@ Tolerances (measured on the CI smoke configs, 2026-08; see TOLERANCES):
                 1.5-1.7 for the reduced-preset CNN engines).  The band
                 catches order-of-magnitude pricing regressions, not
                 fusion noise.
-``train_step_lm``  recorded only, no gate — the LM plan prices the
-                activation / sequence-chunk term alone (params and
-                optimizer state sit outside the seq-budget solve), so
-                its ratio vs the full step's peak is structurally large
-                (observed ~40 on the reduced preset) and carries no
-                pricing signal.
+``train_step_lm``  [0.2, 20.0] — gated since the LM step executes its
+                plan (PR 9): the recorded estimate is the plan's Eq. 7
+                sequence-chunk term plus the paper's ξ (params + grads +
+                optimizer moments), which is the same family of quantity
+                XLA's peak counts for the jitted step.  Observed ratios
+                on the reduced-preset smokes: ~1.7-2.0 for the attention
+                families, ~9-14 for the recurrent families (SSD / xLSTM)
+                — their chunk bodies hold an inner *exact* scan whose
+                per-step fp32 residuals materialize for the one chunk
+                being differentiated, a term Eq. 7's chunk-liveness model
+                does not price.  The band brackets that spread; it
+                catches order-of-magnitude pricing regressions, not the
+                per-family constant.
 ``dryrun``      recorded only, no gate — production-mesh compiles mix
                 512-way sharding with per-device projections, so the
                 ratio is a diagnostic, not an invariant.
@@ -50,7 +57,7 @@ from repro.analysis.report import fmt_bytes
 TOLERANCES: Dict[str, Optional[Tuple[float, float]]] = {
     "serve_pool": (0.95, 1.10),
     "train_step": (0.25, 4.0),
-    "train_step_lm": None,
+    "train_step_lm": (0.2, 20.0),
     "dryrun": None,
 }
 

@@ -25,8 +25,9 @@ Two layers live here:
   :func:`carry_scan_remat` / :func:`swa_overlap_chunks`) — the reference
   implementations, consumed directly by the LM model code;
 * their row-program forms (:class:`ChunkedRowProgram` /
-  :class:`CarryScanRowProgram` / :class:`SwaOverlapRowProgram` +
-  ``make_*_apply``), the same math with the carry *named* and driven by
+  :class:`CarryScanRowProgram` / :class:`StackedCarryScanRowProgram` /
+  :class:`SwaOverlapRowProgram` + ``make_*_apply``), the same math with
+  the carry *named* and driven by
   the shared executor (:mod:`repro.exec.rowprog`), which is what the
   ``repro.exec`` seq engines build — it gives them boundary-cache
   residency (device / host / recompute placement of the carried state)
@@ -238,6 +239,54 @@ class SwaOverlapRowProgram:
         return lax.slice_in_dim(g, r * c, (r + 1) * c, axis=1)
 
 
+class StackedCarryScanRowProgram:
+    """:class:`CarryScanRowProgram` for bodies that consume pre-stacked
+    chunks: ``xs`` leaves are ``(n_chunks, ...)`` (a ``lax.scan``-shaped
+    pytree, possibly a tuple of streams), row ``r``'s args are the
+    ``xs[r]`` slice.  This is the row-program form of the chunk scans the
+    LM family layers build inline (SSD / mLSTM / sLSTM), where the chunk
+    split happened upstream of the scan — the executor drives the same
+    body with the carried state as the named boundary cache.
+
+    ``with_consts`` handles bodies that additionally consume a pytree of
+    differentiable values shared by every row (sLSTM's recurrent weights):
+    the executor's custom VJP only differentiates explicit apply args, so
+    closing over such values would silently detach their gradients —
+    instead ``apply(c0, xs, consts)`` passes them through ``row_args``
+    (an identity, so its transpose accumulates per-row cotangents) to a
+    ``body(consts, carry, chunk)``."""
+
+    returns_carry = True
+
+    def __init__(self, body: Callable, n_chunks: int,
+                 with_consts: bool = False):
+        self.body = body
+        self.n_rows = n_chunks
+        self.with_consts = with_consts
+
+    def init_carry(self, args):
+        return args[0]
+
+    def carry_names(self, r):
+        return "state"
+
+    def row_args(self, args, r):
+        xc = jax.tree.map(lambda u: u[r], args[1])
+        return (xc, args[2]) if self.with_consts else xc
+
+    def row_step(self, carry, xc, r):
+        if self.with_consts:
+            xc, consts = xc
+            return self.body(consts, carry, xc)
+        return self.body(carry, xc)
+
+    def finish(self, ys):
+        return jax.tree.map(lambda *rows: jnp.stack(rows), *ys)
+
+    def out_cotangent(self, g, r):
+        return jax.tree.map(lambda u: u[r], g)
+
+
 def _offloading(residency) -> bool:
     """Does the spec actually move any cache off device?  Device-resident
     plans keep the structured scan/checkpoint lowering below — identical
@@ -272,6 +321,29 @@ def make_carry_scan_apply(body: Callable, n_chunks: int, axis: int = 1,
     from repro.exec.rowprog import make_rowprog_apply
     return make_rowprog_apply(
         CarryScanRowProgram(body, n_chunks, axis), residency)
+
+
+def make_stacked_carry_scan_apply(body: Callable, n_chunks: int,
+                                  residency=None,
+                                  with_consts: bool = False):
+    """``apply(carry_init, xs) -> (carry, stacked_out)`` over pre-stacked
+    chunk streams, equal to ``lax.scan(jax.checkpoint(body), ...)``.
+    Device-resident plans keep that scan lowering; an offloading spec
+    builds the unrolled executor (:class:`StackedCarryScanRowProgram`)
+    that places the carried state.
+
+    ``with_consts=True`` changes the signature to ``apply(carry_init, xs,
+    consts)`` with ``body(consts, carry, chunk)`` — required whenever the
+    body would otherwise close over differentiable values (see
+    :class:`StackedCarryScanRowProgram`)."""
+    if not _offloading(residency):
+        if with_consts:
+            return lambda c0, xs, consts: lax.scan(
+                jax.checkpoint(functools.partial(body, consts)), c0, xs)
+        return lambda c0, xs: lax.scan(jax.checkpoint(body), c0, xs)
+    from repro.exec.rowprog import make_rowprog_apply
+    return make_rowprog_apply(
+        StackedCarryScanRowProgram(body, n_chunks, with_consts), residency)
 
 
 def make_swa_overlap_apply(attend: Callable, window: int, n_chunks: int,

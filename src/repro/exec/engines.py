@@ -107,10 +107,27 @@ def _build_twophase_h(modules, plan: ExecutionPlan):
 # ---------------------------------------------------------------------------
 
 
+def _seq_modules(modules, plan: ExecutionPlan):
+    """Seq engines accept two module forms: the plain chunk-body callable
+    (per-token fn / scan body / attend kernel — the seqrow helper shapes)
+    or the LM stack as ``(params, ModelConfig)``, in which case the
+    builder returns the plan-driven stack apply from
+    :mod:`repro.models.lm.rowexec` (``apply(params, batch) ->
+    (loss, aux)``) instead of a helper-shaped apply."""
+    from repro.models.lm.rowexec import build_lm_apply, lm_config
+    cfg = lm_config(modules)
+    if cfg is None:
+        return None
+    return build_lm_apply(cfg, plan)
+
+
 @register_engine("seq_chunked", kind="seq",
                  doc="halo-0 sequence chunks with per-chunk remat "
                      "(per-token layers); a carry-free row program")
 def _build_seq_chunked(modules, plan: ExecutionPlan):
+    lm = _seq_modules(modules, plan)
+    if lm is not None:
+        return lm
     return _sr.make_chunked_apply(modules, plan.n_rows,
                                   int(plan.get("axis", 1)),
                                   residency=plan.residency)
@@ -120,6 +137,9 @@ def _build_seq_chunked(modules, plan: ExecutionPlan):
                  doc="2PS along the sequence: carried state as the named "
                      "boundary cache ('state'), placed by plan.residency")
 def _build_seq_carry_scan(modules, plan: ExecutionPlan):
+    lm = _seq_modules(modules, plan)
+    if lm is not None:
+        return lm
     return _sr.make_carry_scan_apply(modules, plan.n_rows,
                                      int(plan.get("axis", 1)),
                                      residency=plan.residency)
@@ -132,6 +152,9 @@ def _build_seq_swa_overlap(modules, plan: ExecutionPlan):
     window = int(plan.get("window", 0))
     if window <= 0:
         raise ValueError("seq_swa_overlap plan needs a 'window' extra")
+    lm = _seq_modules(modules, plan)
+    if lm is not None:
+        return lm
     return _sr.make_swa_overlap_apply(modules, window, plan.n_rows,
                                       residency=plan.residency)
 

@@ -158,6 +158,12 @@ def _build_seq_swa_pallas(modules, plan: ExecutionPlan):
     window = int(plan.get("window", 0))
     if window <= 0:
         raise ValueError("seq_swa_pallas plan needs a 'window' extra")
+    from repro.exec.engines import _seq_modules
+    lm = _seq_modules(modules, plan)
+    if lm is not None:
+        # LM stack form: the local attention layers pull this engine's
+        # op-level apply back out through rowexec.swa_kernel
+        return lm
     spec = plan_kernel(plan)
     interpret = resolve_interpret(spec.interpret)
 
@@ -197,6 +203,10 @@ def _build_seq_swa_pallas(modules, plan: ExecutionPlan):
                      "chunks with the carried state as VMEM-resident "
                      "boundary cache (plan.kernel carries chunk)")
 def _build_seq_ssd_pallas(modules, plan: ExecutionPlan):
+    from repro.exec.engines import _seq_modules
+    lm = _seq_modules(modules, plan)
+    if lm is not None:
+        return lm
     spec = plan_kernel(plan)
     interpret = resolve_interpret(spec.interpret)
 

@@ -1188,13 +1188,16 @@ class Planner(_ServePlannerMixin):
     @classmethod
     def for_model(cls, cfg, batch: int, seq_len: int, budget: int = 0,
                   mesh: Optional[MeshSpec] = None,
-                  residency: Optional[ResidencySpec] = None
-                  ) -> ExecutionPlan:
+                  residency: Optional[ResidencySpec] = None,
+                  kernel=None) -> ExecutionPlan:
         """Sequence plan for a :class:`~repro.models.lm.config.ModelConfig`:
         engine from the layer pattern, N from the budget (or the config's
         ``row_chunks`` when unconstrained).  ``mesh=`` makes the budget
         per-device, exactly as on the CNN side; ``residency=`` rides along
-        (see :meth:`for_budget_seq`)."""
+        (see :meth:`for_budget_seq`); ``kernel=`` (spec or backend string)
+        kernelizes the resolved plan (:func:`kernelize_plan`), so the
+        KernelSpec/ResidencySpec land on the ONE plan the train path
+        executes."""
         _count_solve()
         kinds = set(cfg.layer_kinds())
         if kinds & {"mamba", "mlstm", "slstm"}:
@@ -1206,26 +1209,30 @@ class Planner(_ServePlannerMixin):
         head_dim = cfg.head_dim if window else 0
         dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
         if budget:
-            return cls.for_budget_seq(seq_len, cfg.d_model, batch, budget,
+            plan = cls.for_budget_seq(seq_len, cfg.d_model, batch, budget,
                                       d_ff=cfg.d_ff, engine=engine,
                                       window=window, dtype_bytes=dtype_bytes,
                                       head_dim=head_dim, mesh=mesh,
                                       residency=residency)
-        shards = cls._seq_shards(mesh, batch)
-        n = max(1, cfg.row_chunks)
-        est = cls.seq_estimate(seq_len, cfg.d_model, batch // shards, n,
-                               cfg.d_ff, window, dtype_bytes)
-        extras = {"axis": 1, "seq": seq_len, "d_model": cfg.d_model}
-        if window:
-            extras["window"] = window
-        if head_dim:
-            extras["head_dim"] = head_dim
-        return ExecutionPlan(engine=engine, n_rows=n, in_shape=None,
-                             batch=batch, dtype_bytes=dtype_bytes,
-                             est_bytes=est * shards,
-                             est_bytes_per_device=est, mesh=mesh,
-                             residency=residency,
-                             extras=tuple(extras.items()))
+        else:
+            shards = cls._seq_shards(mesh, batch)
+            n = max(1, cfg.row_chunks)
+            est = cls.seq_estimate(seq_len, cfg.d_model, batch // shards, n,
+                                   cfg.d_ff, window, dtype_bytes)
+            extras = {"axis": 1, "seq": seq_len, "d_model": cfg.d_model}
+            if window:
+                extras["window"] = window
+            if head_dim:
+                extras["head_dim"] = head_dim
+            plan = ExecutionPlan(engine=engine, n_rows=n, in_shape=None,
+                                 batch=batch, dtype_bytes=dtype_bytes,
+                                 est_bytes=est * shards,
+                                 est_bytes_per_device=est, mesh=mesh,
+                                 residency=residency,
+                                 extras=tuple(extras.items()))
+        if kernel:
+            plan = kernelize_plan(plan, kernel)
+        return plan
 
 
 def segment_row_capacity(modules: Sequence, h0: int, inner: str,

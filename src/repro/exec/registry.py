@@ -138,6 +138,11 @@ def build_apply(modules, plan: ExecutionPlan) -> Callable:
     """
     spec = get_engine(plan.engine)
     inner = spec.build(modules, plan)
+    if getattr(inner, "handles_mesh", False):
+        # the built apply owns its own placement (e.g. the LM stack apply,
+        # whose (params, batch) signature the per-kind seq wrapper would
+        # mis-constrain; its jit shardings pin the mesh instead)
+        return inner
     if plan.mesh is None or plan.mesh.n_devices <= 1:
         return inner
     wrap = _SHARD_WRAPPERS.get(spec.kind)

@@ -30,7 +30,6 @@ from repro.models.lm import encdec as ED
 from repro.models.lm import model as LM
 from repro.models.lm.config import ModelConfig
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
-from repro.models.lm.model import VISION_DIM
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +79,7 @@ def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
     if cfg.family == "vlm":
         n_img = min(cfg.n_frontend_tokens, S // 2)
         out = {"tokens": _sds((B, S - n_img), jnp.int32),
-               "patch_embeds": _sds((B, n_img, VISION_DIM), cfg.dtype)}
+               "patch_embeds": _sds((B, n_img, cfg.frontend_dim), cfg.dtype)}
         if shape.kind == "train":
             out["labels"] = _sds((B, S - n_img), jnp.int32)
         return out
@@ -245,14 +244,25 @@ def state_sharding(ctx: ShardCtx, state_shape):
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
-                    ctx: Optional[ShardCtx] = None):
+                    ctx: Optional[ShardCtx] = None, plan=None):
+    """fwd + bwd + adamw.  With an :class:`~repro.exec.plan.ExecutionPlan`
+    the forward is built through ``repro.exec.build_apply((params, cfg),
+    plan)``, so the plan's seq engine, kernel backend and residency
+    placements execute inside this jitted/donated step (the stack apply
+    handles mesh via the caller's jit shardings + ``ctx``); without one,
+    the cfg-level remat/row_chunks fallback applies directly."""
     opt_cfg = opt_cfg or AdamWConfig()
-    loss_fn = ED.encdec_loss if cfg.family == "encdec" else LM.lm_loss
+    if plan is not None:
+        from repro.exec import build_apply
+        loss_apply = build_apply((None, cfg), plan)
+    else:
+        loss_fn = ED.encdec_loss if cfg.family == "encdec" else LM.lm_loss
+        loss_apply = lambda p, b: loss_fn(p, b, cfg)
 
     def train_step(state, batch):
         with use_ctx(ctx):
             (loss, aux), grads = jax.value_and_grad(
-                lambda p: loss_fn(p, batch, cfg), has_aux=True)(
+                lambda p: loss_apply(p, batch), has_aux=True)(
                     state["params"])
             new_p, new_opt, om = adamw_update(state["params"], grads,
                                               state["opt"], opt_cfg)

@@ -21,18 +21,19 @@ Two modes:
             grid steps; interpret mode off-TPU, REPRO_PALLAS_INTERPRET
             overrides) with automatic lax fallback when the tiling is
             infeasible.  Composes with --mesh: kernel-backed engines
-            inherit their kind's shard wrapper.  The swap takes effect
-            where registry engines execute — the CNN path (build_apply
-            runs the kernelized trunk); on the LM path the kernelized
-            plan (selection or fallback reason) is recorded and printed,
-            but the jitted LM step still executes cfg-level remat, like
-            the plan's engine name there generally.
+            inherit their kind's shard wrapper.  Both paths execute the
+            swap where the plan's engine runs — the CNN trunk via
+            build_apply, the LM stack via the rowexec hooks inside the
+            jitted step (e.g. gemma's local layers run the flash-SWA op
+            under a kernelized seq_swa_pallas plan).
 * residency: add --residency host (or recompute): the resolved plan
             carries a ResidencySpec and the carry-based engines place
             their inter-row boundary caches accordingly — host offload
             with double-buffered prefetch, or BP-side recomputation.
-            Executes on the CNN path (the row-program executor applies
-            the policy); recorded-only on the LM path, like --kernel.
+            Executes on both paths: the CNN row-program executor applies
+            the policy to the SD caches, and the LM carried chunk scans
+            (SSD / xLSTM state) route through the same executor, with
+            fp_row/bp_row spans in the obs trace to show for it.
             Composes with --mesh and --kernel.
 
 Checkpoints + metrics land in --out.
@@ -87,15 +88,20 @@ def _resolve_plan(args, key_fields, solve):
 
 
 def _audit_step(step_fn, plan, source_extra, *step_args,
-                source="train_step"):
+                source="train_step", est_bytes=None):
     """Measure the compiled step's peak bytes against the plan estimate
-    (obs sessions only — AOT-lowering the step is a real compile)."""
+    (obs sessions only — AOT-lowering the step is a real compile).
+    ``est_bytes`` overrides the plan's per-device estimate when the
+    comparable quantity includes terms outside the plan's solve (the LM
+    path adds the paper's ξ — params/grads/optimizer state — so the
+    train_step_lm ratio carries pricing signal and can be gated)."""
     if plan is None or not obs.enabled():
         return None
     measured = measure_step(step_fn, *step_args)
     if measured is None:
         return None
-    rec = plan_audit(plan, measured, source, extra=source_extra)
+    rec = plan_audit(plan, measured, source, extra=source_extra,
+                     est_bytes=est_bytes)
     ratio = rec["ratio"]
     print(f"plan audit: est/dev {rec['est_bytes_per_device']} "
           f"measured peak {measured['peak_bytes']}"
@@ -118,43 +124,32 @@ def train_lm(args):
     if args.row_chunks:
         cfg = dataclasses.replace(cfg, row_chunks=args.row_chunks)
     plan = None
-    if args.budget_gb and not args.row_chunks:  # explicit --row-chunks wins
+    wants_plan = args.budget_gb is not None or args.residency or args.kernel
+    if wants_plan and not args.row_chunks:  # explicit --row-chunks wins
         # budget-driven sequence-axis plan: pick the chunk count (Eq. 7
         # along the token axis, per-device under --mesh) and engine from
-        # the layer pattern
+        # the layer pattern; --kernel kernelizes the same plan.  The step
+        # below executes it via build_apply — no cfg mutation here.
         residency_spec = ResidencySpec.parse(args.residency)
         plan = _resolve_plan(
             args,
             dict(mode="lm", arch=cfg.name, preset=args.preset,
                  batch=args.batch, seq=args.seq, budget_gb=args.budget_gb,
-                 mesh=args.mesh, residency=args.residency),
+                 mesh=args.mesh, residency=args.residency,
+                 kernel=args.kernel),
             lambda table: Planner.for_model(
                 cfg, args.batch, args.seq,
-                budget=int(args.budget_gb * 2**30),
-                mesh=mesh_spec, residency=residency_spec))
-        if args.residency:
-            # recorded policy only, like --kernel: the jitted LM step
-            # executes cfg-level remat, not registry engines
-            print("residency policy recorded on plan; LM step runs "
-                  "cfg-level remat")
-        if args.kernel:
-            from repro.exec import kernelize_plan
-            plan = kernelize_plan(plan, args.kernel)
-            # recorded policy only: the jitted LM step executes cfg-level
-            # remat, not registry engines (see module docstring)
-            print("kernel policy recorded on plan; LM step runs cfg-level "
-                  "remat")
+                budget=int((args.budget_gb or 0.0) * 2**30),
+                mesh=mesh_spec, residency=residency_spec,
+                kernel=args.kernel or None))
         print("plan:", plan.describe())
-        # row_chunks only takes effect under a rows-remat policy
-        remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat,
-                                                            cfg.remat)
-        cfg = dataclasses.replace(cfg, row_chunks=plan.n_rows, remat=remat)
     key = jax.random.PRNGKey(args.seed)
     init = ED.init_encdec if cfg.family == "encdec" else LM.init_lm
     params = init(key, cfg)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    row_chunks = plan.n_rows if plan is not None else cfg.row_chunks
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
-          f"row_chunks={cfg.row_chunks} remat={cfg.remat}"
+          f"row_chunks={row_chunks} remat={cfg.remat}"
           + (f" mesh={mesh_spec.describe()}" if mesh_spec else ""))
 
     opt_cfg = AdamWConfig(lr=args.lr)
@@ -172,12 +167,13 @@ def train_lm(args):
         ctx = make_shape_ctx(mesh, cfg, shape_spec)
         st_shard = state_sharding(ctx, state)
         b_shard = batch_sharding(ctx, batch_specs(cfg, shape_spec))
-        step_fn = jax.jit(make_train_step(cfg, opt_cfg, ctx=ctx),
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, ctx=ctx, plan=plan),
                           in_shardings=(st_shard, b_shard),
                           out_shardings=(st_shard, None),
                           donate_argnums=(0,))
     else:
-        step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, plan=plan),
+                          donate_argnums=(0,))
 
     ds = TokenDataset(TokenDatasetConfig(vocab=cfg.vocab, seq_len=args.seq,
                                          batch=args.batch, seed=args.seed))
@@ -191,7 +187,8 @@ def train_lm(args):
                  "labels": jnp.asarray(hb["labels"])}
         if cfg.family == "vlm":
             batch["patch_embeds"] = jnp.zeros(
-                (args.batch, cfg.n_frontend_tokens, 1152), jnp.float32)
+                (args.batch, cfg.n_frontend_tokens, cfg.frontend_dim),
+                jnp.float32)
         if cfg.family == "encdec":
             batch = {"frames": jnp.asarray(
                         np.random.default_rng((args.seed, step)).normal(
@@ -200,20 +197,34 @@ def train_lm(args):
                      "tokens": batch["tokens"], "labels": batch["labels"]}
         if step == 0:
             # audit before the first call: donated state buffers are
-            # still live, and lowering only reads avals anyway
-            # record-only source: the LM plan prices the activation /
-            # sequence-chunk term alone (params + opt state are outside
-            # the seq-budget solve), so no gate compares it to the full
-            # step's measured peak
+            # still live, and lowering only reads avals anyway.  The plan
+            # prices the activation / sequence-chunk term; adding the
+            # paper's ξ (params + grads + optimizer moments, all fp32
+            # beside the activations) makes the estimate comparable to
+            # the step's measured peak, so train_step_lm is a gated
+            # source now that the plan is what actually executes
+            est = None
+            if plan is not None:
+                xi = 4 * sum(l.nbytes
+                             for l in jax.tree.leaves(state["params"]))
+                est = plan.est_bytes_per_device + xi
             audit = _audit_step(step_fn, plan,
                                 {"arch": cfg.name, "batch": args.batch,
                                  "seq": args.seq}, state, batch,
-                                source="train_step_lm")
+                                source="train_step_lm", est_bytes=est)
         state, metrics = step_fn(state, batch)
+        if step == 0:
+            # step 0 pays the compile: log it separately and restart the
+            # clock so elapsed_s tracks steady-state step time
+            jax.block_until_ready(metrics)
+            compile_s = round(time.time() - t0, 1)
+            t0 = time.time()
         if step % args.log_every == 0 or step == args.steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
             m["elapsed_s"] = round(time.time() - t0, 1)
+            if step == 0:
+                m["compile_s"] = compile_s
             steplog.log(m)
     if args.save:
         store.save(args.out, args.steps, state["params"], state["opt"],
@@ -247,15 +258,17 @@ def train_cnn(args):
 
     # resolve the plan request: --budget-gb auto-selects engine+N via
     # Planner.for_budget; --strategy/--rows pin them; else the config's
-    # PlanRequest decides
+    # PlanRequest decides.  None-sentinel checks: an explicit zero (e.g.
+    # --rows 0 = planner's choice, --budget-gb 0 = unconstrained) is a
+    # real override, only an omitted flag falls through to the config
     batch = args.batch or ccfg.batch
     req = ccfg.plan
-    if args.budget_gb:
+    if args.budget_gb is not None:
         req = dataclasses.replace(req, engine="", n_rows=0,
                                   budget_gb=args.budget_gb)
-    if args.strategy:
+    if args.strategy is not None:
         req = dataclasses.replace(req, engine=args.strategy)
-    if args.rows:
+    if args.rows is not None:
         req = dataclasses.replace(req, n_rows=args.rows)
     if args.kernel:
         req = dataclasses.replace(req, kernel=args.kernel)
@@ -333,8 +346,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--row-chunks", type=int, default=0)
     ap.add_argument("--strategy", default=None)
-    ap.add_argument("--rows", type=int, default=0)
-    ap.add_argument("--budget-gb", type=float, default=0.0,
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--budget-gb", type=float, default=None,
                     help="activation byte budget; Planner.for_budget "
                          "auto-selects engine and granularity under it "
                          "(per-device when combined with --mesh)")
@@ -347,16 +360,16 @@ def main():
                          "resolved engine for its Pallas-backed alternate "
                          "(rows as VMEM grid steps) when the tiling is "
                          "feasible, with automatic lax fallback otherwise; "
-                         "executes on the CNN path, recorded-only on the "
-                         "LM path (needs --budget-gb there)")
+                         "executes on both paths — the CNN trunk via "
+                         "build_apply, the LM stack via its rowexec hooks")
     ap.add_argument("--residency", default="",
                     choices=["", "device", "host", "recompute"],
                     help="boundary-cache residency policy for the carry-"
                          "based engines: 'host' offloads the inter-row "
                          "caches with double-buffered prefetch, "
                          "'recompute' regenerates them in BP; executes "
-                         "on the CNN path, recorded-only on the LM path "
-                         "(needs --budget-gb there)")
+                         "on both paths — CNN SD caches and the LM "
+                         "carried chunk scans (SSD / xLSTM state)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--save", action="store_true")

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.launch.sharding import lc
+from repro.models.lm import rowexec
 from repro.models.lm.common import dense_init, rope
 
 NEG_INF = -1e30
@@ -102,12 +103,25 @@ def _proj_out(params, attn_out):
 
 
 def attn_train(params, x, dims: AttnDims, n_chunks: int = 1):
-    """Training/prefill forward over a full sequence, query-chunked."""
+    """Training/prefill forward over a full sequence, query-chunked.
+
+    Sliding-window layers consult the active ExecutionPlan
+    (:func:`repro.models.lm.rowexec.swa_kernel`): a kernelized
+    ``seq_swa_pallas`` plan swaps the halo chunk loop below for the
+    engine's flash-SWA op (GQA handled by repeating KV heads — value-
+    identical); lax plans keep the loop, which IS the ``seq_swa_overlap``
+    row lowering."""
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     q, k, v = _qkv(params, x, dims, positions)
     k_pos = jnp.arange(S, dtype=jnp.int32)
-    if n_chunks <= 1 or S % n_chunks:
+    kernel = rowexec.swa_kernel(dims.window) if dims.window > 0 else None
+    if kernel is not None:
+        g = dims.n_heads // dims.n_kv
+        kk = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vv = jnp.repeat(v, g, axis=2) if g > 1 else v
+        out = kernel(q, kk, vv).astype(q.dtype)
+    elif n_chunks <= 1 or S % n_chunks:
         out = _attend(q, k, v, k_pos, k_pos, dims.window, dims.n_heads // dims.n_kv)
     else:
         c = S // n_chunks

@@ -54,6 +54,7 @@ class ModelConfig:
     # --- modality frontend stub ---
     frontend: str = "none"      # none | vision | audio
     n_frontend_tokens: int = 576  # patch/frame embeddings per sample
+    frontend_dim: int = 1152    # patch-embedding width (SigLIP-so400m)
 
     # --- numerics / policy ---
     dtype: str = "bfloat16"     # activation/compute dtype

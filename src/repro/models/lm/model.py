@@ -24,7 +24,7 @@ from repro.models.lm.common import (
 )
 from repro.models.lm.config import ModelConfig
 
-VISION_DIM = 1152  # SigLIP-so400m patch embedding width (stub frontend)
+VISION_DIM = 1152  # default cfg.frontend_dim (SigLIP-so400m stub frontend)
 
 
 def init_lm(key, cfg: ModelConfig):
@@ -39,7 +39,7 @@ def init_lm(key, cfg: ModelConfig):
                                          cfg.param_dtype)
     if cfg.frontend == "vision":
         params["projector"] = {
-            "w1": dense_init(ks[3], (VISION_DIM, cfg.d_model),
+            "w1": dense_init(ks[3], (cfg.frontend_dim, cfg.d_model),
                              cfg.param_dtype),
             "w2": dense_init(ks[4], (cfg.d_model, cfg.d_model),
                              cfg.param_dtype),

@@ -1,0 +1,153 @@
+"""Plan-aware execution seam for the LM layer stack (PR 9).
+
+The CNN trainer hands its trunk to ``repro.exec.build_apply`` and lets the
+registry engine realise the plan (engine choice, kernel backend, boundary-
+cache residency).  The LM stack cannot be rebuilt module-by-module the same
+way — its row structure lives *inside* the family layers (the SSD chunk
+scan, the xLSTM chunk scans, the sliding-window halo loop, the chunked
+classifier head) — so this module exposes the stack as row-program modules
+the other way around: ``build_apply((params, cfg), plan)`` resolves the
+plan's seq engine, whose builder delegates back here, and the layers
+consult the *active plan* at trace time through two hooks:
+
+* :func:`scan_rows` — the carried chunk scans (``ssm_train`` /
+  ``mlstm_train`` / ``slstm_train``) route their ``lax.scan(jax.checkpoint
+  (body), ...)`` through it.  With no active plan, or a device-resident
+  one, it emits exactly that legacy lowering (bit-identical losses and
+  grads); an offloading :class:`~repro.exec.plan.ResidencySpec` builds the
+  PR 5 row-program executor instead, so the carried state — the 2PS
+  boundary cache — is host-offloaded with double-buffered prefetch or
+  recomputed in BP, with ``fp_row``/``bp_row`` obs spans to prove it ran.
+* :func:`swa_kernel` — local attention layers swap their halo chunk loop
+  for the plan's ``seq_swa_pallas`` op when the kernelized plan selected
+  it (lax fallback specs keep the reference loop).
+
+Everything here is trace-time policy: the active plan is plain Python
+state consulted while ``jit`` traces the step, never a traced value.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+from jax import lax
+
+_ACTIVE_PLAN = None
+
+
+@contextlib.contextmanager
+def use_plan(plan):
+    """Activate ``plan`` for the layer-stack hooks while tracing."""
+    global _ACTIVE_PLAN
+    prev = _ACTIVE_PLAN
+    _ACTIVE_PLAN = plan
+    try:
+        yield
+    finally:
+        _ACTIVE_PLAN = prev
+
+
+def current_plan():
+    return _ACTIVE_PLAN
+
+
+def lm_config(modules):
+    """The ModelConfig when ``modules`` is the LM form ``(params, cfg)``
+    that ``build_apply`` receives from the train path; None for the plain
+    chunk-body callables the seqrow helpers consume."""
+    from repro.models.lm.config import ModelConfig
+    if isinstance(modules, tuple) and len(modules) == 2 \
+            and isinstance(modules[1], ModelConfig):
+        return modules[1]
+    return None
+
+
+def plan_cfg(cfg, plan):
+    """cfg with the plan's chunk count as ``row_chunks`` under a rows-remat
+    policy — the same conversion the trainer applied before plans executed
+    here, so the planned step and the legacy remat step chunk the MLP /
+    attention / classifier-head axes identically."""
+    remat = {"none": "rows", "block": "block_rows"}.get(cfg.remat, cfg.remat)
+    return dataclasses.replace(cfg, row_chunks=max(1, plan.n_rows),
+                               remat=remat)
+
+
+def build_lm_apply(cfg, plan):
+    """``apply(params, batch) -> (loss, aux)``: the family loss with the
+    plan active for the layer-stack hooks.
+
+    Mesh placement is owned by the caller's ``jit`` shardings
+    (``launch.steps`` state/batch spec trees), not by the registry's seq
+    shard wrapper — that wrapper constrains every positional argument's
+    leading axis, which is wrong for a ``(params, batch)`` signature —
+    so the returned apply is marked ``handles_mesh`` and the registry
+    leaves it unwrapped."""
+    if cfg.family == "encdec":
+        from repro.models.lm.encdec import encdec_loss as loss_fn
+    else:
+        from repro.models.lm.model import lm_loss as loss_fn
+    run_cfg = plan_cfg(cfg, plan)
+
+    def apply(params, batch):
+        with use_plan(plan):
+            return loss_fn(params, batch, run_cfg)
+
+    apply.handles_mesh = True
+    return apply
+
+
+def _residency():
+    plan = _ACTIVE_PLAN
+    return plan.residency if plan is not None else None
+
+
+def scan_rows(body, carry0, xs, consts=None):
+    """Carried chunk scan ``body(carry, chunk) -> (carry, out)`` over
+    leading-axis-stacked ``xs`` (array or pytree of arrays), placed by the
+    active plan.
+
+    Device-resident (or plan-less) lowering is the exact legacy form —
+    ``lax.scan(jax.checkpoint(body), carry0, xs)`` — so losses and grads
+    stay bit-identical.  An offloading residency builds the row-program
+    executor: the carried state is the named boundary cache ("state"),
+    offloaded/prefetched or recomputed per the spec.
+
+    A body that uses differentiable values beyond the carry and the chunk
+    (sLSTM's recurrent weights) MUST pass them via ``consts`` and take the
+    signature ``body(consts, carry, chunk)`` — the row-program executor's
+    custom VJP only differentiates explicit arguments, so a closure would
+    raise (or worse, detach the weight gradients)."""
+    residency = _residency()
+    if residency is None or not residency.offloads:
+        if consts is not None:
+            return lax.scan(
+                jax.checkpoint(functools.partial(body, consts)), carry0, xs)
+        return lax.scan(jax.checkpoint(body), carry0, xs)
+    from repro.core.seqrow import make_stacked_carry_scan_apply
+    n_rows = jax.tree.leaves(xs)[0].shape[0]
+    if consts is not None:
+        return make_stacked_carry_scan_apply(
+            body, n_rows, residency, with_consts=True)(carry0, xs, consts)
+    return make_stacked_carry_scan_apply(body, n_rows, residency)(carry0, xs)
+
+
+def swa_kernel(window: int) -> Optional[object]:
+    """The plan's sliding-window attention op, or None.
+
+    Returns the op-level ``apply(q, k, v)`` of the ``seq_swa_pallas``
+    engine — (B, S, H, D) layout, lax-reference backward — when the
+    active plan kernelized to it and its window matches this layer's.
+    None (lax plans, kernel fallbacks, window mismatch) keeps the model's
+    inline halo chunk loop, which IS the ``seq_swa_overlap`` row lowering.
+    """
+    plan = _ACTIVE_PLAN
+    if plan is None or plan.engine != "seq_swa_pallas" or window <= 0:
+        return None
+    if int(plan.get("window", 0)) != int(window):
+        return None
+    from repro.exec.registry import get_engine
+    return get_engine("seq_swa_pallas").build(None, plan)

@@ -9,7 +9,9 @@ B_t ⊗ x_t``, output ``y_t = C_t · h_t + D x_t`` with multi-head structure
 (n_heads × head_p × state_n), causal-conv1d input stage, gated output.
 
 Train path uses the chunked formulation: intra-chunk causal attention-like
-term + inter-chunk carried state via ``repro.core.seqrow.carry_scan_remat``.
+term + inter-chunk carried state via ``repro.models.lm.rowexec.scan_rows``
+(the legacy checkpointed ``lax.scan`` lowering, or the row-program executor
+when the active ExecutionPlan's residency offloads the carry).
 Decode carries (B, H, P, N) state — O(1) in context length (long_500k).
 """
 
@@ -19,10 +21,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.seqrow import carry_scan_remat
 from repro.launch.sharding import lc
+from repro.models.lm import rowexec
 from repro.models.lm.common import dense_init
 
 
@@ -92,7 +93,11 @@ def _ssd_chunk(x, B, C, a, dt, h0, dims: SSMDims):
     # build (t, s) decay matrix per head
     diff = cum[:, :, None, :] - cum[:, None, :, :]        # (Bt, t, s, H)
     mask = jnp.tril(jnp.ones((x.shape[1], x.shape[1]), bool))
-    w = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    # mask BEFORE exp: acausal (t < s) entries have diff > 0, which
+    # overflows for long chunks, and the inf in the where-VJP then turns
+    # every upstream gradient to NaN; exp(-inf) = 0 keeps the forward
+    # bit-identical to masking after
+    w = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
     cb = jnp.einsum("btn,bsn->bts", C, B)                 # (Bt, t, s)
     scores = cb[..., None] * w                            # (Bt, t, s, H)
     xdt = x * dt[..., None]                               # (Bt, s, H, P)
@@ -144,9 +149,9 @@ def ssm_train(params, x, dims: SSMDims, return_state: bool = False):
         c = S // n_chunks
         stack = lambda u: jnp.moveaxis(
             u.reshape((Bt, n_chunks, c) + u.shape[2:]), 1, 0)
-        h_fin, ys = lax.scan(jax.checkpoint(body), h0,
-                             (stack(xh), stack(Bf), stack(Cf), stack(a),
-                              stack(dt_act)))
+        h_fin, ys = rowexec.scan_rows(body, h0,
+                                      (stack(xh), stack(Bf), stack(Cf),
+                                       stack(a), stack(dt_act)))
         y = jnp.moveaxis(ys, 0, 1).reshape(Bt, S, H, P)
     else:
         h_fin, y = body(h0, (xh, Bf, Cf, a, dt_act))

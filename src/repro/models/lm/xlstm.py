@@ -2,10 +2,12 @@
 sLSTM (scalar memory, hidden-state recurrence).
 
 Both are recurrent scans — the LR-CNN 2PS mapping (carried state = boundary
-cache) applies directly: training runs an outer ``lax.scan`` over sequence
-chunks with a ``jax.checkpoint``-ed body (per-chunk BP recompute), an inner
-exact scan within the chunk.  Decode is a single recurrence step with O(1)
-state (long_500k eligible).
+cache) applies directly: training runs an outer chunk scan through
+``repro.models.lm.rowexec.scan_rows`` (the checkpointed ``lax.scan``
+lowering with per-chunk BP recompute, or the residency-placing row-program
+executor when an ExecutionPlan is active), an inner exact scan within the
+chunk.  Decode is a single recurrence step with O(1) state (long_500k
+eligible).
 
 Stabilised exponential gating follows the paper: ``m_t = max(f̃+m, ĩ)``,
 ``i' = exp(ĩ−m)``, ``f' = exp(f̃+m_prev−m)``.
@@ -20,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.launch.sharding import lc
+from repro.models.lm import rowexec
 from repro.models.lm.common import dense_init
 
 
@@ -107,9 +110,9 @@ def mlstm_train(params, x, dims: XLSTMDims, return_state: bool = False):
         def body(carry, chunk):
             hs, carry = _mlstm_scan(chunk, carry)
             return carry, hs
-        carry, hs = lax.scan(jax.checkpoint(body), carry0,
-                             (stack(q), stack(k), stack(v), stack(ig),
-                              stack(fg)))
+        carry, hs = rowexec.scan_rows(body, carry0,
+                                      (stack(q), stack(k), stack(v),
+                                       stack(ig), stack(fg)))
         h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
     else:
         h, carry = _mlstm_scan((q, k, v, ig, fg), carry0)
@@ -200,16 +203,20 @@ def slstm_train(params, x, dims: XLSTMDims, return_state: bool = False):
         + (jnp.full((B, d), -1e30, jnp.float32),)
 
     n_chunks = max(1, S // dims.chunk)
-    step = lambda carry, xt: _slstm_step(pf32, dims, carry, xt)
     if n_chunks > 1:
         c = S // n_chunks
         xc = jnp.moveaxis(xp.reshape(B, n_chunks, c, 4 * d), 1, 0)
-        def body(carry, chunk):
+
+        # the recurrent weights go through scan_rows' explicit consts —
+        # the row-program executor cannot differentiate closures
+        def body(consts, carry, chunk):
+            step = lambda cry, xt: _slstm_step(consts, dims, cry, xt)
             carry, hs = lax.scan(step, carry, jnp.moveaxis(chunk, 1, 0))
             return carry, jnp.moveaxis(hs, 0, 1)
-        carry, hs = lax.scan(jax.checkpoint(body), carry0, xc)
+        carry, hs = rowexec.scan_rows(body, carry0, xc, consts=pf32)
         h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
     else:
+        step = lambda carry, xt: _slstm_step(pf32, dims, carry, xt)
         carry, hs = lax.scan(step, carry0, jnp.moveaxis(xp, 1, 0))
         h = jnp.moveaxis(hs, 0, 1)
     out = h.astype(dt) @ params["w_out"].astype(dt)

@@ -131,11 +131,18 @@ def test_check_flags_out_of_tolerance_sources():
                                 cache_kind="paged_kv", ratio=1.2)])
     problems = check(bad)
     assert len(problems) == 1 and "paged_kv" in problems[0]
-    # dryrun and the LM train path are record-only: no ratio gates them
+    # dryrun stays record-only: no ratio gates it
     assert check(summarize([_audit_rec(source="dryrun", ratio=90.0)])) == []
+    # the LM train path is gated since its plans execute (PR 9): its
+    # wide band admits the recurrent families' unpriced inner-scan
+    # residuals but trips on order-of-magnitude drift
     assert check(summarize([_audit_rec(source="train_step_lm",
-                                       engine="seq_chunked",
-                                       ratio=40.0)])) == []
+                                       engine="seq_carry_scan",
+                                       ratio=8.7)])) == []
+    lm_bad = check(summarize([_audit_rec(source="train_step_lm",
+                                         engine="seq_chunked",
+                                         ratio=40.0)]))
+    assert len(lm_bad) == 1 and "train_step_lm" in lm_bad[0]
 
 
 def test_audit_table_renders_groups():
