@@ -1,0 +1,123 @@
+"""Pipelined row execution over the model axis vs pure data parallelism
+at FIXED global batch.
+
+The LR-CNN angle (DESIGN.md §6): a row partition is exactly the
+microbatch a GPipe-style schedule streams through layer stages, so a
+``data=2,model=2`` mesh can trade the pure-data-parallel plan's full
+per-device replica (params + the whole trunk's working set) for S=2
+pipeline stages — each model shard holds one stage's params and stash —
+at the cost of a measured fill/drain bubble.  This bench measures both
+sides on the same global batch: wall-clock per train step, analytic
+per-device estimate (``est_bytes_per_device`` / ``estimate_staged``),
+compiled per-device peak (``memory_analysis`` temp bytes), and the
+bubble fraction as the executor itself reports it
+(``pipeline.bubble_fraction`` gauge) next to the roofline's
+(S−1)/(N+S−1) charge.
+
+Standalone (forces 8 virtual CPU devices, prints BENCH JSON):
+  PYTHONPATH=src python -m benchmarks.bench_pipeline
+Under ``benchmarks.run`` the meshes are capped to the devices jax
+already initialised (both rows skip on the plain 1-CPU container).
+"""
+
+import os
+
+if __name__ == "__main__":  # must precede any jax import to take effect
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import json
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro import obs
+from repro.exec import ExecutionPlan, MeshSpec, StageSpec, build_apply
+from repro.exec.planner import Planner
+from repro.models.cnn.vgg import init_vgg16
+
+H = 64
+GLOBAL_BATCH = 8
+N_ROWS = 4
+BUDGET = 64 * 2**20
+
+
+def _step_builder(mods, plan):
+    apply_fn = build_apply(mods, plan)
+
+    def loss(p, x):
+        return jnp.sum(apply_fn(p, x) ** 2)
+
+    return jax.jit(jax.value_and_grad(loss))
+
+
+def _measure(mods, plan, params, x):
+    step = _step_builder(mods, plan)
+    with obs.capture() as sess:
+        us = time_fn(step, params["trunk"], x, iters=3, warmup=1)
+        bubble = sess.metrics.gauge("pipeline.bubble_fraction").value
+    mem = step.lower(params["trunk"], x).compile().memory_analysis()
+    return us, int(getattr(mem, "temp_size_in_bytes", 0)), bubble
+
+
+def run() -> List[dict]:
+    shape = (H, H, 3)
+    mods, params = init_vgg16(jax.random.PRNGKey(0), shape,
+                              width_mult=0.125, n_classes=4, n_stages=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (GLOBAL_BATCH, H, H, 3))
+    if len(jax.devices()) < 4:
+        return []  # both meshes need 4 devices (see module docstring)
+
+    rows = []
+    # baseline: pure data parallelism, all 4 devices on the data axis
+    mesh_dp = MeshSpec.parse("data=4")
+    plan_dp = Planner(mods, shape, GLOBAL_BATCH,
+                      mesh=mesh_dp).plan("overlap", N_ROWS, budget=BUDGET)
+    us, temp, _ = _measure(mods, plan_dp, params, x)
+    rows.append({
+        "name": f"pipeline/vgg_b{GLOBAL_BATCH}/data4",
+        "us_per_call": round(us, 1),
+        "engine": plan_dp.engine, "n_rows": plan_dp.n_rows,
+        "est_bytes_per_device": plan_dp.est_bytes_per_device,
+        "temp_bytes_per_device": int(temp),
+    })
+
+    # pipelined: half the devices on data, half on model (S=2 stages)
+    mesh_pp = MeshSpec.parse("data=2,model=2")
+    stage = StageSpec.even(len(mods), 2)
+    planner = Planner(mods, shape, GLOBAL_BATCH, mesh=mesh_pp)
+    plan_pp = planner.plan_staged(N_ROWS, stage, budget=BUDGET)
+    us, temp, bubble = _measure(mods, plan_pp, params, x)
+    n, s = plan_pp.n_rows, stage.n_stages
+    rows.append({
+        "name": f"pipeline/vgg_b{GLOBAL_BATCH}/data2_model2_s2",
+        "us_per_call": round(us, 1),
+        "engine": plan_pp.engine, "n_rows": n,
+        "stages": stage.describe(),
+        "est_bytes_per_device": plan_pp.est_bytes_per_device,
+        "temp_bytes_per_device": int(temp),
+        "bubble_fraction": round(bubble, 4),
+        "bubble_fraction_analytic": round((s - 1) / (n + s - 1), 4),
+    })
+
+    # headline: per-device compiled peak, pipelined vs pure data-parallel
+    rows.append({
+        "name": "pipeline/vgg_b8/temp_bytes_ratio_vs_data4",
+        "temp_ratio": round(rows[0]["temp_bytes_per_device"]
+                            / max(1, rows[1]["temp_bytes_per_device"]), 3),
+        "est_ratio": round(rows[0]["est_bytes_per_device"]
+                           / max(1, rows[1]["est_bytes_per_device"]), 3),
+    })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ MODULES = [
     ("seqrow_beyond_paper", "benchmarks.bench_seqrow"),
     ("serving_continuous_batching", "benchmarks.bench_serving"),
     ("sharding_data_extent", "benchmarks.bench_sharding"),
+    ("pipeline_model_axis", "benchmarks.bench_pipeline"),
     ("costmodel_predicted_vs_measured", "benchmarks.bench_costmodel"),
 ]
 

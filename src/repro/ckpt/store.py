@@ -1,42 +1,109 @@
 """Model/optimizer checkpointing: flat-key npz store with step metadata.
 
-Pytrees are flattened with path-derived keys, saved host-local (one process
-in this container; per-host shards in a real pod would write their addressable
-slices — noted in DESIGN.md).  Restore reproduces the exact tree structure
-given a template pytree.
+Pytrees are flattened with path-derived keys.  Replicated (or
+single-device) leaves save as one array.  Leaves sharded across devices
+save **per-shard**: each host writes only its addressable shards, keyed
+``<key>::shard<j>`` and deduplicated by shard index (replicas of the same
+slice write once), with the slice offsets recorded under the meta file's
+``shard_layout`` — saving never gathers a sharded leaf through host
+memory, which is what keeps checkpointing viable when params shard over
+the model axis (DESIGN.md §5).  Restore reproduces the exact tree
+structure given a template pytree and re-places each leaf against the
+template's sharding (``jax.device_put`` under a ``NamedSharding``
+template re-shards on load, so a checkpoint written under one mesh
+restores under another).
+
+The plan that produced a run rides along: ``save(..., plan=...)`` writes
+the :class:`~repro.exec.plan.ExecutionPlan` JSON next to the arrays
+(``ckpt_XXXXXXXX.plan.json``), and :func:`restore_plan` replays it — the
+same logged-policy contract the train steplog keeps, at the checkpoint
+boundary.
 """
 
 from __future__ import annotations
 
 import json
 import os
-import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def _flatten(tree) -> Dict[str, np.ndarray]:
-    flat = {}
+def _leaf_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _unique_shards(leaf):
+    """The addressable shards of ``leaf``, one per distinct index (data
+    replicas hold identical slices — write each slice once)."""
+    seen, out = set(), []
+    for shard in leaf.addressable_shards:
+        key = tuple((s.start, s.stop, s.step) for s in shard.index)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(shard)
+    return out
+
+
+def _is_split(leaf) -> bool:
+    """True when ``leaf`` is materially sharded: a multi-device
+    ``jax.Array`` whose devices do NOT all hold the full value."""
+    return isinstance(leaf, jax.Array) \
+        and len(leaf.sharding.device_set) > 1 \
+        and not leaf.is_fully_replicated
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, dict]]:
+    """``(arrays, layout)``: flat-key arrays ready for npz, plus the
+    shard layout of every split leaf.  A replicated leaf lands as one
+    ``key`` entry (``np.asarray`` of a replicated array reads one local
+    copy, no gather); a split leaf lands as ``key::shard<j>`` entries —
+    each shard's data is already host-local, so nothing re-assembles the
+    global value on the way out."""
+    arrays: Dict[str, np.ndarray] = {}
+    layout: Dict[str, dict] = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        flat[key] = np.asarray(leaf)
-    return flat
+        key = _leaf_key(path)
+        if not _is_split(leaf):
+            arrays[key] = np.asarray(leaf)
+            continue
+        shards = _unique_shards(leaf)
+        indices = []
+        for j, shard in enumerate(shards):
+            arrays[f"{key}::shard{j}"] = np.asarray(shard.data)
+            indices.append([list(s.indices(dim)[:2])
+                            for s, dim in zip(shard.index, leaf.shape)])
+        layout[key] = {"shape": list(leaf.shape), "indices": indices}
+    return arrays, layout
 
 
 def save(directory: str, step: int, params: Any,
-         opt_state: Optional[Any] = None, extra: Optional[dict] = None):
+         opt_state: Optional[Any] = None, extra: Optional[dict] = None,
+         plan=None):
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}")
-    np.savez(path + ".params.npz", **_flatten(params))
+    shard_layout: Dict[str, dict] = {}
+    arrays, layout = _flatten(params)
+    np.savez(path + ".params.npz", **arrays)
+    if layout:
+        shard_layout["params"] = layout
     if opt_state is not None:
-        np.savez(path + ".opt.npz", **_flatten(opt_state))
+        arrays, layout = _flatten(opt_state)
+        np.savez(path + ".opt.npz", **arrays)
+        if layout:
+            shard_layout["opt"] = layout
     meta = {"step": step, **(extra or {})}
+    if shard_layout:
+        meta["shard_layout"] = shard_layout
     with open(path + ".meta.json", "w") as f:
         json.dump(meta, f)
+    if plan is not None:
+        with open(path + ".plan.json", "w") as f:
+            f.write(plan.to_json())
     # update "latest" pointer
     with open(os.path.join(directory, "latest.json"), "w") as f:
         json.dump({"step": step}, f)
@@ -51,24 +118,47 @@ def latest_step(directory: str) -> Optional[int]:
         return json.load(f)["step"]
 
 
+def _assemble(data, key: str, layout: dict) -> np.ndarray:
+    """Reassemble one split leaf from its ``key::shard<j>`` pieces."""
+    spec = layout[key]
+    out = np.empty(spec["shape"],
+                   dtype=data[f"{key}::shard0"].dtype)
+    for j, idx in enumerate(spec["indices"]):
+        out[tuple(slice(a, b) for a, b in idx)] = data[f"{key}::shard{j}"]
+    return out
+
+
 def restore(directory: str, template: Any, step: Optional[int] = None,
             kind: str = "params"):
-    """Restore a pytree with the template's structure and dtypes."""
+    """Restore a pytree with the template's structure and dtypes.  A leaf
+    saved per-shard reassembles from its pieces; when the template leaf
+    carries a sharding (a ``jax.Array`` placed by the executing plan's
+    mesh), the restored value is ``device_put`` against it — so a sharded
+    train state restores sharded, without the full tree ever staging
+    through a single device."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"ckpt_{step:08d}.{kind}.npz")
     data = np.load(path)
-    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
-    flat, tdef = leaves_with_path
+    layout = restore_meta(directory, step).get("shard_layout", {}) \
+        .get(kind, {})
+    flat, tdef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for p, leaf in flat:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
-                       for q in p)
-        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        key = _leaf_key(p)
+        if key in data:
+            arr = np.asarray(data[key])
+        else:
+            arr = _assemble(data, key, layout)
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-        out.append(arr)
+        arr = arr.astype(np.dtype(leaf.dtype))
+        if isinstance(leaf, jax.Array) \
+                and len(leaf.sharding.device_set) > 1:
+            out.append(jax.device_put(arr, leaf.sharding))
+        else:
+            out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(tdef, out)
 
 
@@ -77,3 +167,18 @@ def restore_meta(directory: str, step: Optional[int] = None) -> dict:
         step = latest_step(directory)
     with open(os.path.join(directory, f"ckpt_{step:08d}.meta.json")) as f:
         return json.load(f)
+
+
+def restore_plan(directory: str, step: Optional[int] = None):
+    """The :class:`~repro.exec.plan.ExecutionPlan` saved next to the
+    arrays, or ``None`` for a checkpoint written without one."""
+    from repro.exec.plan import ExecutionPlan
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    p = os.path.join(directory, f"ckpt_{step:08d}.plan.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return ExecutionPlan.from_json(f.read())

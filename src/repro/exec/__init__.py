@@ -29,6 +29,7 @@ from repro.exec.costmodel import (
 )
 from repro.exec.plan import (
     ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, ResidencySpec,
+    StageSpec,
 )
 from repro.exec.plancache import PlanCache, cached_plan, plan_cache_key
 from repro.exec.planner import (
@@ -44,10 +45,11 @@ from repro.exec.rowprog import RowProgram, make_rowprog_apply
 # importing the modules registers the built-in engines + shard wrappers
 from repro.exec import engines as _builtin_engines  # noqa: E402,F401
 from repro.exec import pallas_engines as _pallas_engines  # noqa: E402,F401
+from repro.exec import pipeline as _pipeline_engines  # noqa: E402,F401
 
 __all__ = [
     "ExecutionPlan", "KernelSpec", "MeshSpec", "PlanRequest",
-    "ResidencySpec", "Planner", "EngineSpec",
+    "ResidencySpec", "StageSpec", "Planner", "EngineSpec",
     "register_engine", "get_engine", "list_engines", "build_apply",
     "register_shard_wrapper", "kernelize_plan",
     "RowProgram", "make_rowprog_apply",

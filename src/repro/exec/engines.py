@@ -182,17 +182,27 @@ def _lc_batch0(x):
 
 @register_shard_wrapper("cnn")
 def _shard_cnn(inner, plan: ExecutionPlan):
-    """Data-parallel CNN trunk: images shard over the batch axes, params
-    replicate (their gradient all-reduce is inserted by the partitioner).
-    Row-centric granularity N stays per-device — exactly the quantity the
-    sharded Planner solved for."""
+    """CNN trunk sharding: images shard over the batch axes (pod x data);
+    params shard over the model axis when the mesh has one — conv kernels
+    split their output-channel (last) dim onto the logical "tp" name,
+    which :func:`repro.launch.sharding.make_plan_ctx` maps to
+    ``plan.mesh.model_axis`` (absent axis or non-divisible channel counts
+    fall back to replication via ``filter_spec``); 1-D leaves (biases,
+    norm scales) replicate, their gradient all-reduce inserted by the
+    partitioner.  Row-centric granularity N stays per-device — exactly
+    the quantity the sharded Planner solved for — and the engine under
+    this wrapper (pipelined or not) never sees the mesh."""
     from repro.launch.sharding import lc, use_ctx
     ctx = _plan_ctx(plan)
 
+    def _lc_param(l):
+        if l.ndim == 4:  # conv kernel (kh, kw, cin, cout): cout onto "tp"
+            return lc(l, *(None,) * (l.ndim - 1), "tp")
+        return lc(l, *(None,) * l.ndim)
+
     def apply(params, x):
         with use_ctx(ctx):
-            params = jax.tree.map(lambda l: lc(l, *(None,) * l.ndim),
-                                  params)
+            params = jax.tree.map(_lc_param, params)
             out = inner(params, _lc_batch0(x))
             return _lc_batch0(out)
 

@@ -97,6 +97,12 @@ class MeshSpec:
         return n
 
     # ------------------------------------------------------------------
+    #: axis names the CLI vocabulary knows (the constructor stays general —
+    #: a programmatic MeshSpec may rename data/model axes — but the string
+    #: form maps onto the logical-name table in launch/sharding.py, so an
+    #: unknown name there could never shard anything and is a typo).
+    KNOWN_AXES = ("pod", "data", "model")
+
     @classmethod
     def parse(cls, s: str) -> "MeshSpec":
         """Parse the CLI form ``"data=8"`` / ``"data=4,model=2"`` (axis
@@ -109,7 +115,11 @@ class MeshSpec:
             if "=" not in part:
                 raise ValueError(f"bad mesh axis {part!r}; expected name=N")
             n, v = part.split("=", 1)
-            axes.append((n.strip(), int(v)))
+            name = n.strip()
+            if name not in cls.KNOWN_AXES:
+                raise ValueError(f"unknown mesh axis {name!r}; expected one "
+                                 f"of {cls.KNOWN_AXES}")
+            axes.append((name, int(v)))
         return cls(axes=tuple(axes))
 
     def describe(self) -> str:
@@ -287,6 +297,78 @@ class ResidencySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """Serializable stage partition — *how the module trunk splits into S
+    contiguous pipeline stages* (DESIGN.md §6).
+
+    LR-CNN's rows are weakly dependent across every conv layer, which makes
+    a row partition exactly the microbatch a GPipe-style schedule streams
+    through layer stages: ``stages`` records the split as ``(start, end)``
+    half-open module ranges that must tile the trunk contiguously, and the
+    ``pipeline_rows`` engine (:mod:`repro.exec.pipeline`) runs the N row
+    partitions through them with the stage-boundary activations carried as
+    named row-program caches (``"stage_b{s}"``), so PR 5's residency
+    placements apply to the pipeline stash unchanged.
+
+    Under a mesh with a model axis, stage s's parameters live on model-axis
+    coordinate ``s % model_extent`` conceptually; the spec itself is plain
+    data and never touches device state (the :class:`MeshSpec` pattern).
+    """
+
+    stages: Tuple[Tuple[int, int], ...]   # per-stage (start, end) ranges
+
+    def __post_init__(self):
+        stages = tuple((int(a), int(b)) for a, b in self.stages)
+        if not stages:
+            raise ValueError("StageSpec needs at least one stage")
+        if stages[0][0] != 0:
+            raise ValueError(f"first stage must start at module 0, got "
+                             f"{stages[0]}")
+        for i, (a, b) in enumerate(stages):
+            if b <= a:
+                raise ValueError(f"stage {i} range ({a}, {b}) is empty")
+            if i and a != stages[i - 1][1]:
+                raise ValueError(f"stages must be contiguous: stage {i} "
+                                 f"starts at {a} but stage {i - 1} ends at "
+                                 f"{stages[i - 1][1]}")
+        object.__setattr__(self, "stages", stages)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def n_modules(self) -> int:
+        return self.stages[-1][1]
+
+    @classmethod
+    def even(cls, n_modules: int, n_stages: int) -> "StageSpec":
+        """Split ``n_modules`` into ``n_stages`` contiguous near-even
+        ranges (the remainder spreads over the leading stages)."""
+        if not 1 <= n_stages <= n_modules:
+            raise ValueError(f"cannot split {n_modules} modules into "
+                             f"{n_stages} stages")
+        base, rem = divmod(n_modules, n_stages)
+        stages, start = [], 0
+        for s in range(n_stages):
+            end = start + base + (1 if s < rem else 0)
+            stages.append((start, end))
+            start = end
+        return cls(stages=tuple(stages))
+
+    def describe(self) -> str:
+        return "|".join(f"{a}:{b}" for a, b in self.stages)
+
+    def to_dict(self) -> dict:
+        return {"stages": [list(s) for s in self.stages]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StageSpec":
+        return cls(stages=tuple(tuple(s) for s in d["stages"]))
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanRequest:
     """What a config *asks for* — resolved to an :class:`ExecutionPlan` by
     the :class:`~repro.exec.planner.Planner` at launch time.
@@ -327,6 +409,12 @@ class ExecutionPlan:
     carry-based engine (:mod:`repro.exec.rowprog`), and the Planner prices
     it (host-offload / recompute terms next to the Eqs. 7-16 accounting).
     It composes orthogonally with ``mesh`` and ``kernel``.
+
+    ``stage`` (when set) makes pipeline-stage partitioning part of the
+    policy: a :class:`StageSpec` splitting the trunk into S contiguous
+    stages the ``pipeline_rows`` engine streams the N row microbatches
+    through (:mod:`repro.exec.pipeline`), with ξ divided over the model
+    axis per stage in the Planner's accounting.
     """
 
     engine: str
@@ -343,6 +431,7 @@ class ExecutionPlan:
     mesh: Optional[MeshSpec] = None
     kernel: Optional[KernelSpec] = None
     residency: Optional[ResidencySpec] = None
+    stage: Optional[StageSpec] = None
     extras: Tuple[Tuple[str, Any], ...] = ()
 
     def __post_init__(self):
@@ -360,6 +449,9 @@ class ExecutionPlan:
         if isinstance(self.residency, dict):
             object.__setattr__(self, "residency",
                                ResidencySpec.from_dict(self.residency))
+        if isinstance(self.stage, dict):
+            object.__setattr__(self, "stage",
+                               StageSpec.from_dict(self.stage))
         if not self.est_bytes_per_device and self.est_bytes:
             object.__setattr__(self, "est_bytes_per_device",
                                self.est_bytes // self.data_shards)
@@ -414,12 +506,14 @@ class ExecutionPlan:
                  mesh: Optional[MeshSpec] = None,
                  kernel: Optional[KernelSpec] = None,
                  residency: Optional[ResidencySpec] = None,
+                 stage: Optional[StageSpec] = None,
                  **extras) -> "ExecutionPlan":
         """An unestimated plan pinning (engine, N) — the escape hatch for
         callers that already know what they want (benchmarks, tests)."""
         return cls(engine=engine, n_rows=n_rows, in_shape=in_shape,
                    n_segments=n_segments, mesh=mesh, kernel=kernel,
-                   residency=residency, extras=tuple(extras.items()))
+                   residency=residency, stage=stage,
+                   extras=tuple(extras.items()))
 
     # ------------------------------------------------------------------
     def describe(self) -> str:
@@ -440,6 +534,8 @@ class ExecutionPlan:
             bits.append(f"kernel={self.kernel.backend}")
         if self.residency is not None:
             bits.append(f"residency={self.residency.describe()}")
+        if self.stage is not None:
+            bits.append(f"stages={self.stage.describe()}")
         for k, v in self.extras:
             bits.append(f"{k}={v}")
         return "ExecutionPlan(" + " ".join(bits) + ")"
@@ -454,6 +550,7 @@ class ExecutionPlan:
             else None
         d["residency"] = self.residency.to_dict() \
             if self.residency is not None else None
+        d["stage"] = self.stage.to_dict() if self.stage is not None else None
         return d
 
     @classmethod
@@ -469,6 +566,8 @@ class ExecutionPlan:
             d["kernel"] = KernelSpec.from_dict(d["kernel"])
         if d.get("residency") is not None:
             d["residency"] = ResidencySpec.from_dict(d["residency"])
+        if d.get("stage") is not None:
+            d["stage"] = StageSpec.from_dict(d["stage"])
         return cls(**d)
 
     def to_json(self) -> str:

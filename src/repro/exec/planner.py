@@ -51,7 +51,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 from repro.core import rowplan as _rp
 from repro.exec.plan import (
     ExecutionPlan, KernelSpec, MeshSpec, PlanRequest, ResidencySpec,
-    batch_shards,
+    StageSpec, batch_shards,
 )
 
 CNN_ENGINES = ("base", "ckp", "overlap", "twophase", "overlap_h",
@@ -662,11 +662,17 @@ class Planner(_ServePlannerMixin):
     def estimate(self, engine: str, n_rows: int,
                  n_segments: Optional[int] = None,
                  segments: Tuple[Tuple[int, int, int], ...] = (),
-                 residency: Optional[ResidencySpec] = None) -> int:
+                 residency: Optional[ResidencySpec] = None,
+                 stage: Optional[StageSpec] = None) -> int:
         """Peak activation bytes ONE device holds (== global bytes when no
         mesh is set).  ``residency`` re-prices the carry-based engines'
         SD caches (see the module docstring); the other engines carry
-        nothing, so their estimate is residency-invariant."""
+        nothing, so their estimate is residency-invariant.  ``stage``
+        routes ``"pipeline_rows"`` through the per-stage accounting
+        (:meth:`estimate_staged`)."""
+        if engine == "pipeline_rows":
+            return self.estimate_staged(
+                n_rows, stage or self._default_stage_spec())
         if engine in ("base",):
             return _rp.omega_column(self.modules, self.in_shape,
                                     self.dev_batch,
@@ -691,12 +697,18 @@ class Planner(_ServePlannerMixin):
     def plan(self, engine: str, n_rows: int = 1,
              n_segments: Optional[int] = None, budget: int = 0,
              residency: Optional[ResidencySpec] = None,
+             stage: Optional[StageSpec] = None,
              **extras) -> ExecutionPlan:
         """Resolve an explicit (engine, N) request into a full plan with
         estimates and (for checkpointed engines) pinned segments.
         ``residency`` is both priced (carry-based engines) and recorded on
-        the plan, so the emitted policy replays verbatim."""
+        the plan, so the emitted policy replays verbatim.  For
+        ``"pipeline_rows"`` this delegates to :meth:`plan_staged` —
+        ``stage`` pins the partition, default :meth:`_default_stage_spec`."""
         n_rows = max(1, n_rows)
+        if engine == "pipeline_rows":
+            return self.plan_staged(n_rows, stage, budget=budget,
+                                    residency=residency, **extras)
         segments: Tuple[Tuple[int, int, int], ...] = ()
         if engine in INNER_STRATEGY:
             segments = self._segments(n_rows, INNER_STRATEGY[engine],
@@ -712,6 +724,116 @@ class Planner(_ServePlannerMixin):
             budget=budget, feasible=(budget == 0 or dev_est < dev_budget),
             mesh=self.mesh, residency=residency,
             extras=tuple(extras.items()))
+
+    # ------------------------------------------------------------------
+    # staged (pipelined) plans: Eqs. 7-16 per stage over the model axis
+    # ------------------------------------------------------------------
+    def _default_stage_spec(self, n_stages: Optional[int] = None
+                            ) -> StageSpec:
+        """Even partition with S = the mesh's model extent when it has one
+        (one stage per model shard), else 2 — capped at the module count."""
+        if n_stages is None:
+            model = self.mesh.model if self.mesh is not None else 1
+            n_stages = model if model > 1 else 2
+        return StageSpec.even(len(self.modules),
+                              max(1, min(n_stages, len(self.modules))))
+
+    def estimate_staged(self, n_rows: int, stage: StageSpec) -> int:
+        """Per-device bytes of the pipelined schedule: the worst stage's
+        peak.  A stage holds (a) its GPipe stash — the stage-input
+        boundary activation, one full feature map at the stage's input
+        level (stage 0 reads the batch input, which every engine already
+        charges, so its stash is 0); (b) the OverL working set of its own
+        sub-trunk at granularity N (rows are replicated-halo microbatches,
+        Eq. 16 applied to the stage's module range); (c) its share of the
+        params/grads/opt constant — xi divides by the model extent because
+        each model shard holds only its stages' params."""
+        if stage.n_modules != len(self.modules):
+            raise ValueError(
+                f"StageSpec covers {stage.n_modules} modules but the trunk "
+                f"has {len(self.modules)}")
+        shapes = self._shapes()
+        db, B = self.dtype_bytes, self.dev_batch
+        model = self.mesh.model if self.mesh is not None else 1
+        xi_s = self.xi // max(1, model)
+        worst = 0
+        for a, b in stage.stages:
+            stash = (B * shapes[a][0] * shapes[a][1] * shapes[a][2] * db
+                     if a > 0 else 0)
+            work = _rp.estimate_bytes(self.modules[a:b], shapes[a], B,
+                                      "overlap", n_rows, db)
+            worst = max(worst, stash + work + xi_s)
+        return worst
+
+    def plan_staged(self, n_rows: int, stage: Optional[StageSpec] = None,
+                    budget: int = 0,
+                    residency: Optional[ResidencySpec] = None,
+                    **extras) -> ExecutionPlan:
+        """Explicit ``pipeline_rows`` plan: N row microbatches through the
+        given stage partition (default :meth:`_default_stage_spec`), with
+        per-stage, per-device feasibility."""
+        n_rows = max(1, n_rows)
+        stage = stage or self._default_stage_spec()
+        dev_est = self.estimate_staged(n_rows, stage)
+        dev_budget = budget // self.shards
+        return ExecutionPlan(
+            engine="pipeline_rows", n_rows=n_rows, in_shape=self.in_shape,
+            batch=self.batch, dtype_bytes=self.dtype_bytes,
+            est_bytes=dev_est * self.shards, est_bytes_per_device=dev_est,
+            budget=budget, feasible=(budget == 0 or dev_est < dev_budget),
+            mesh=self.mesh, residency=residency, stage=stage,
+            extras=tuple(extras.items()))
+
+    def solve_staged(self, n_stages: Optional[int] = None, budget: int = 0,
+                     residency: Optional[ResidencySpec] = None
+                     ) -> ExecutionPlan:
+        """min N s.t. the worst stage fits the per-device budget, at the
+        even S-stage partition — the staged counterpart of :meth:`solve`;
+        the smallest-estimate loser when nothing fits."""
+        stage = self._default_stage_spec(n_stages)
+        best: Optional[ExecutionPlan] = None
+        for n in range(1, self.n_max + 1):
+            try:
+                p = self.plan_staged(n, stage, budget=budget,
+                                     residency=residency)
+            except ValueError:
+                break  # N exceeds a stage's row-split bound; larger N too
+            if p.feasible:
+                return p
+            if best is None or p.est_bytes < best.est_bytes:
+                best = p
+        return best
+
+    def stagedize(self, plan: Optional[ExecutionPlan],
+                  budget: Optional[int] = None,
+                  residency: Optional[ResidencySpec] = None
+                  ) -> Optional[ExecutionPlan]:
+        """Fit a single-stage-infeasible plan by pipelining stages over
+        the model axis — the model-parallel counterpart of
+        :meth:`residencize`, run after it in ``for_budget``.
+
+        Only fires when the mesh actually has a model extent to shard
+        stages onto; tries S = 2 .. min(model extent, L) and returns the
+        first feasible staged solve, recording the decision under the
+        ``pipeline`` extra (the ``residencized`` pattern).  A feasible
+        plan, a zero budget, or a data-only mesh return ``plan``
+        unchanged."""
+        if plan is None or plan.feasible:
+            return plan
+        budget = plan.budget if budget is None else budget
+        model = self.mesh.model if self.mesh is not None else 1
+        if not budget or model <= 1:
+            return plan
+        dev_budget = budget // self.shards
+        for n_stages in range(2, min(model, len(self.modules)) + 1):
+            p = self.solve_staged(n_stages, budget, residency=residency)
+            if p is not None and p.feasible:
+                return p.with_extras(pipeline=(
+                    f"single-stage solve infeasible (best {plan.engine} "
+                    f"needs {plan.est_bytes_per_device} B/device > budget "
+                    f"{dev_budget}); S={n_stages} pipeline stages over the "
+                    f"model axis fit at N={p.n_rows}"))
+        return plan
 
     def kernelize(self, plan: ExecutionPlan, spec,
                   vmem_limit: int = PALLAS_VMEM_LIMIT) -> ExecutionPlan:
@@ -874,6 +996,8 @@ class Planner(_ServePlannerMixin):
         per-device: per-device batch against per-device budget.  Under an
         offloading ``residency`` the 2PS estimates use the repriced SD
         terms, so the minimal N can be smaller than the device-only one."""
+        if engine == "pipeline_rows":
+            return self.solve_staged(budget=budget, residency=residency)
         if engine == "twophase" and _offloads(residency):
             # the repriced solve: the same validity-bounded scan solve_n
             # does, against the offloaded estimate
@@ -980,9 +1104,12 @@ class Planner(_ServePlannerMixin):
         caller didn't pin a residency policy), the :meth:`residencize`
         pass retries the carry-based engines with their boundary caches
         moved off device — the budgets the device-only solve rejects are
-        exactly the ones host offload / recompute exist for.  Failing
-        that too, returns the infeasible plan with the smallest estimate
-        so the caller can see how far over budget it is.
+        exactly the ones host offload / recompute exist for.  When the
+        mesh has a model extent, a still-infeasible result then goes
+        through :meth:`stagedize`: S pipeline stages over the model axis,
+        each holding 1/S of the params and one stage's working set.
+        Failing everything, returns the infeasible plan with the smallest
+        estimate so the caller can see how far over budget it is.
 
         With a ``cost_table`` (a :class:`repro.exec.costmodel.CostTable`)
         the static orders are replaced by a measured roofline: every
@@ -1013,8 +1140,10 @@ class Planner(_ServePlannerMixin):
             if best is None or p.est_bytes < best.est_bytes:
                 best = p
         if residency is None:
-            return planner.residencize(best, budget)
-        return best
+            best = planner.residencize(best, budget)
+        # the model-axis fallback: budgets neither the device-only solve
+        # nor residency offload can fit may still pipeline into S stages
+        return planner.stagedize(best, budget, residency)
 
     # ------------------------------------------------------------------
     # measured-cost selection (roofline over a calibrated CostTable)
@@ -1030,9 +1159,11 @@ class Planner(_ServePlannerMixin):
         O(N^2) forward-chain term — ``fwd * (N-1)/2`` — under recompute
         residency.  Copy side: the 2PS SD volume crosses the PCIe both
         ways under host residency, scaled by the audit-seeded
-        byte-honesty ratio for the matching plan group.  The step pays
-        ``max(compute, copy)`` (prefetch hides copies behind the adjacent
-        row) plus per-row dispatch overhead."""
+        byte-honesty ratio for the matching plan group.  A pipelined plan
+        additionally stretches its compute by the GPipe fill/drain bubble
+        ``1 + (S-1)/N``.  The step pays ``max(compute, copy)`` (prefetch
+        hides copies behind the adjacent row) plus per-row dispatch
+        overhead."""
         from repro.exec.costmodel import audit_ratio_key, trunk_fwd_flops
 
         fwd = trunk_fwd_flops(self.modules, self.in_shape, self.dev_batch)
@@ -1041,7 +1172,8 @@ class Planner(_ServePlannerMixin):
         engine = plan.engine
         if engine in INNER_STRATEGY:  # segment recompute: one extra FP
             flops += fwd
-        if engine in ("overlap", "overlap_h", "overlap_pallas") and n > 1:
+        if engine in ("overlap", "overlap_h", "overlap_pallas",
+                      "pipeline_rows") and n > 1:
             halo = _rp.overlap_halo_bytes(self.modules, self.in_shape,
                                           self.dev_batch, n,
                                           self.dtype_bytes)
@@ -1068,6 +1200,10 @@ class Planner(_ServePlannerMixin):
                               else "device", "")
         scale = table.ratio(key)
         compute = table.compute_us(flops)
+        if engine == "pipeline_rows" and plan.stage is not None:
+            # GPipe fill/drain bubble: (S-1) of (N+S-1) ticks run below
+            # full stage occupancy, charged as compute stretch
+            compute *= 1.0 + (plan.stage.n_stages - 1) / n
         copy = table.copy_us(d2h * scale, h2d * scale)
         return {"us": max(compute, copy) + table.row_overhead_us * n,
                 "compute_us": compute, "copy_us": copy, "flops": flops,
@@ -1094,12 +1230,20 @@ class Planner(_ServePlannerMixin):
                     p = self.solve(engine, budget, residency=spec)
                     if p is not None:
                         pool.append(p)
+        model = self.mesh.model if self.mesh is not None else 1
+        if model > 1:
+            # staged alternates join the pool too: the roofline's bubble
+            # term prices their fill/drain ramp against the offload copies
+            for n_stages in range(2, min(model, len(self.modules)) + 1):
+                p = self.solve_staged(n_stages, budget, residency=residency)
+                if p is not None:
+                    pool.append(p)
         feasible = [p for p in pool if p.feasible]
         if not feasible:
             best = min(device_pool, key=lambda p: p.est_bytes)
             if residency is None:
-                return self.residencize(best, budget)
-            return best
+                best = self.residencize(best, budget)
+            return self.stagedize(best, budget, residency)
         pref = {e: i for i, e in enumerate(BUDGET_PREFERENCE)}
         scored = [(self.predict_plan_us(p, table), p) for p in feasible]
         scored.sort(key=lambda cp: (cp[0]["us"],

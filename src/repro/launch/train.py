@@ -227,8 +227,10 @@ def train_lm(args):
                 m["compile_s"] = compile_s
             steplog.log(m)
     if args.save:
+        # sharded leaves save per-shard; the executed plan rides along as
+        # a JSON sidecar so the checkpoint replays its own policy
         store.save(args.out, args.steps, state["params"], state["opt"],
-                   {"arch": cfg.name})
+                   {"arch": cfg.name}, plan=plan)
     steplog.dump(os.path.join(args.out, "train_log.json"),
                  arch=cfg.name, mode="lm",
                  plan=plan.to_dict() if plan is not None else None,

@@ -1,0 +1,368 @@
+"""Pipelined row execution: StageSpec serialization, the pipeline_rows /
+pipeline_seq engines' exactness against single-device column execution,
+and the Planner's staged per-stage budget math.
+
+The sharded execution tests need 8 virtual devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_pipeline.py
+
+Under the plain tier-1 run (one real CPU device) they skip; everything
+else — schedule geometry, plan math, single-device parity — runs
+everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.overlap import make_column_apply
+from repro.exec import (
+    ExecutionPlan, KernelSpec, MeshSpec, Planner, ResidencySpec, StageSpec,
+    build_apply,
+)
+from repro.exec.pipeline import PipelineRowProgram, resolve_stage_spec
+from repro.models.cnn.vgg import init_vgg16
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+H, BATCH = 64, 8
+SHAPE = (H, H, 3)
+KEY = jax.random.PRNGKey(0)
+MODS, PARAMS = init_vgg16(KEY, SHAPE, width_mult=0.125, n_classes=4,
+                          n_stages=3)
+X = jax.random.normal(jax.random.PRNGKey(1), (BATCH, H, H, 3))
+MESH22 = MeshSpec.parse("data=2,model=2")
+
+
+def _grads(apply_fn, params, x):
+    def loss(p, xx):
+        return jnp.sum(apply_fn(p, xx) ** 2)
+    return jax.value_and_grad(loss)(params, x)
+
+
+def _max_rel(a, b):
+    out = 0.0
+    for l1, l2 in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        denom = float(jnp.abs(l1).max())
+        if denom > 0:
+            out = max(out, float(jnp.abs(l1 - l2).max()) / denom)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MeshSpec: the model-axis paths (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_parse_rejects_bad_axes():
+    with pytest.raises(ValueError, match="duplicate"):
+        MeshSpec.parse("data=2,data=2")
+    with pytest.raises(ValueError, match="unknown mesh axis"):
+        MeshSpec.parse("foo=2")
+    with pytest.raises(ValueError, match="size"):
+        MeshSpec.parse("data=0")
+    with pytest.raises(ValueError, match="name=N"):
+        MeshSpec.parse("data=2,model")
+
+
+def test_per_device_with_model_axis():
+    """per_device divides batch by the BATCH extent only (pod x data) —
+    the model axis replicates the batch — and keeps the stage partition,
+    so a per-device projection still knows its pipeline schedule."""
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH22).plan(
+        "pipeline_rows", 4)
+    assert plan.stage is not None and plan.stage.n_stages == 2
+    sub = plan.per_device()
+    assert sub.mesh is None
+    assert sub.batch == BATCH // 2        # data=2, NOT data*model=4
+    assert sub.stage == plan.stage
+    assert sub.n_rows == plan.n_rows
+
+
+# ---------------------------------------------------------------------------
+# StageSpec: validation + serialization
+# ---------------------------------------------------------------------------
+
+
+def test_stage_spec_validates():
+    with pytest.raises(ValueError, match="at least one"):
+        StageSpec(stages=())
+    with pytest.raises(ValueError, match="start at module 0"):
+        StageSpec(stages=((1, 3),))
+    with pytest.raises(ValueError, match="empty"):
+        StageSpec(stages=((0, 0),))
+    with pytest.raises(ValueError, match="contiguous"):
+        StageSpec(stages=((0, 2), (3, 5)))
+    with pytest.raises(ValueError, match="cannot split"):
+        StageSpec.even(3, 4)
+
+
+def test_stage_spec_even_and_roundtrip():
+    s = StageSpec.even(17, 3)
+    assert s.n_stages == 3 and s.n_modules == 17
+    assert s.stages == ((0, 6), (6, 12), (12, 17))
+    assert s.describe() == "0:6|6:12|12:17"
+    assert StageSpec.from_dict(s.to_dict()) == s
+    assert StageSpec.even(4, 4).stages == ((0, 1), (1, 2), (2, 3), (3, 4))
+
+
+def test_full_plan_json_roundtrip_with_stage():
+    """Mesh + stage + kernel + residency all ride one plan through JSON."""
+    import dataclasses
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH22).plan(
+        "pipeline_rows", 4, residency=ResidencySpec(default="host"))
+    plan = dataclasses.replace(plan, kernel=KernelSpec(backend="lax"))
+    rt = ExecutionPlan.from_json(plan.to_json())
+    assert rt == plan
+    assert rt.mesh == MESH22
+    assert rt.stage == plan.stage and rt.stage.n_stages == 2
+    assert rt.kernel == KernelSpec(backend="lax")
+    assert rt.residency == ResidencySpec(default="host")
+    assert "stages=" in rt.describe()
+
+
+def test_resolve_stage_spec_precedence():
+    plan = ExecutionPlan.explicit("pipeline_rows", 4,
+                                  stage=StageSpec.even(17, 5))
+    assert resolve_stage_spec(17, plan).n_stages == 5      # explicit wins
+    plan = ExecutionPlan.explicit("pipeline_rows", 4, n_stages=3)
+    assert resolve_stage_spec(17, plan).n_stages == 3      # extras next
+    plan = ExecutionPlan.explicit("pipeline_rows", 4, mesh=MESH22)
+    assert resolve_stage_spec(17, plan).n_stages == 2      # mesh.model
+    plan = ExecutionPlan.explicit("pipeline_rows", 4)
+    assert resolve_stage_spec(17, plan).n_stages == 2      # default S=2
+    assert resolve_stage_spec(1, plan).n_stages == 1       # capped at L
+
+
+# ---------------------------------------------------------------------------
+# schedule geometry
+# ---------------------------------------------------------------------------
+
+
+def test_tick_schedule_and_bubble_fraction():
+    plan = ExecutionPlan.explicit("pipeline_rows", 4, in_shape=SHAPE,
+                                  stage=StageSpec.even(len(MODS), 3))
+    prog = PipelineRowProgram(MODS, plan)
+    N, S = 4, 3
+    assert prog.n_rows == N + S - 1                        # ticks
+    assert prog.bubble_fraction() == (S - 1) / (N + S - 1)
+    # carry slots: none entering tick 0; slot s live entering tick t iff
+    # stage s ran microbatch t-1-s at the previous tick
+    assert prog.carry_names(0) == ()
+    assert prog.carry_names(1) == ("stage_b0",)
+    assert prog.carry_names(2) == ("stage_b0", "stage_b1")
+    assert prog.carry_names(N) == ("stage_b0", "stage_b1")
+    assert prog.carry_names(N + 1) == ("stage_b1",)        # stage 0 drained
+
+
+# ---------------------------------------------------------------------------
+# exactness: pipeline_rows == column-centric reference
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_rows_matches_column_single_device():
+    ref_fn = make_column_apply(MODS)
+    plan = Planner(MODS, SHAPE, BATCH).plan(
+        "pipeline_rows", 4, stage=StageSpec.even(len(MODS), 3))
+    fn = build_apply(MODS, plan)
+    assert jnp.allclose(fn(PARAMS["trunk"], X),
+                        ref_fn(PARAMS["trunk"], X), atol=1e-5)
+    l_ref, g_ref = _grads(ref_fn, PARAMS["trunk"], X)
+    l_got, g_got = _grads(fn, PARAMS["trunk"], X)
+    assert abs(float(l_got) - float(l_ref)) / abs(float(l_ref)) < 1e-5
+    assert _max_rel(g_ref, g_got) < 1e-4
+
+
+@pytest.mark.parametrize("policy", ["host", "recompute"])
+def test_pipeline_rows_with_residency(policy):
+    """The GPipe stash (inter-stage boundary carries) placed off-device
+    by the ordinary ResidencySpec machinery — parity must hold."""
+    ref_fn = make_column_apply(MODS)
+    plan = Planner(MODS, SHAPE, BATCH).plan(
+        "pipeline_rows", 4, stage=StageSpec.even(len(MODS), 2),
+        residency=ResidencySpec(default=policy))
+    fn = build_apply(MODS, plan)
+    assert jnp.allclose(fn(PARAMS["trunk"], X),
+                        ref_fn(PARAMS["trunk"], X), atol=1e-5)
+    l_ref, g_ref = _grads(ref_fn, PARAMS["trunk"], X)
+    l_got, g_got = _grads(fn, PARAMS["trunk"], X)
+    assert abs(float(l_got) - float(l_ref)) / abs(float(l_ref)) < 1e-5
+    assert _max_rel(g_ref, g_got) < 1e-4
+
+
+def test_pipeline_seq_matches_stack():
+    x = jax.random.normal(KEY, (4, 32, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    fns = [lambda u: jnp.tanh(u @ w), lambda u: u * 2.0,
+           lambda u: u + 1.0]
+    ref = fns[2](fns[1](fns[0](x)))
+    apply = build_apply(fns, ExecutionPlan.explicit(
+        "pipeline_seq", 4, axis=1, stage=StageSpec.even(3, 2)))
+    assert jnp.allclose(apply(x), ref, atol=1e-6)
+    g1 = jax.grad(lambda xx: jnp.sum(fns[2](fns[1](fns[0](xx))) ** 2))(x)
+    g2 = jax.grad(lambda xx: jnp.sum(apply(xx) ** 2))(x)
+    assert jnp.allclose(g1, g2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded execution: data=2,model=2 on 8 virtual devices
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+def test_pipeline_shard_parity():
+    ref_fn = make_column_apply(MODS)
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH22).plan("pipeline_rows", 4)
+    assert plan.stage.n_stages == 2   # S defaults to the model extent
+    fn = build_apply(MODS, plan)
+    got = fn(PARAMS["trunk"], X)
+    assert jnp.allclose(got, ref_fn(PARAMS["trunk"], X), atol=1e-5)
+    assert "data" in str(got.sharding.spec)
+    l_ref, g_ref = _grads(ref_fn, PARAMS["trunk"], X)
+    l_got, g_got = _grads(fn, PARAMS["trunk"], X)
+    assert abs(float(l_got) - float(l_ref)) / abs(float(l_ref)) < 1e-5
+    assert _max_rel(g_ref, g_got) < 1e-4
+
+
+@needs_devices
+@pytest.mark.parametrize("policy", ["host", "recompute"])
+def test_pipeline_shard_parity_with_residency(policy):
+    ref_fn = make_column_apply(MODS)
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH22).plan(
+        "pipeline_rows", 4, residency=ResidencySpec(default=policy))
+    fn = build_apply(MODS, plan)
+    assert jnp.allclose(fn(PARAMS["trunk"], X),
+                        ref_fn(PARAMS["trunk"], X), atol=1e-5)
+    l_ref, g_ref = _grads(ref_fn, PARAMS["trunk"], X)
+    l_got, g_got = _grads(fn, PARAMS["trunk"], X)
+    assert abs(float(l_got) - float(l_ref)) / abs(float(l_ref)) < 1e-5
+    assert _max_rel(g_ref, g_got) < 1e-4
+
+
+@needs_devices
+def test_pipeline_params_shard_over_model_axis():
+    """Conv kernels land split over the model axis (out channels onto the
+    logical "tp" name); the divisibility fallback replicates kernels
+    whose channel count doesn't divide the model extent."""
+    from repro.exec.engines import _plan_ctx
+    from repro.launch.sharding import lc, use_ctx
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH22).plan("pipeline_rows", 4)
+    with use_ctx(_plan_ctx(plan)):
+        k = lc(jnp.zeros((3, 3, 8, 16)), None, None, None, "tp")
+        assert "model" in str(k.sharding.spec)
+        odd = lc(jnp.zeros((3, 3, 8, 15)), None, None, None, "tp")
+        assert "model" not in str(odd.sharding.spec)
+
+
+@needs_devices
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    """Model-axis-sharded leaves save per-shard (no gather), restore
+    re-places them against the template sharding, and the executing plan
+    rides along as a JSON sidecar."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.ckpt import store
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    k = jax.random.normal(KEY, (3, 3, 8, 16))
+    params = {
+        "w": jax.device_put(k, NamedSharding(
+            mesh, P(None, None, None, "model"))),
+        "b": jax.device_put(jnp.arange(8.0), NamedSharding(mesh, P())),
+    }
+    plan = Planner(MODS, SHAPE, BATCH,
+                   mesh=MeshSpec.parse("data=2,model=4")).plan(
+                       "pipeline_rows", 4)
+    store.save(str(tmp_path), 3, params, plan=plan)
+    data = np.load(str(tmp_path / "ckpt_00000003.params.npz"))
+    assert "w" not in data.files          # split leaf never saved whole
+    assert sorted(f for f in data.files if f.startswith("w::")) == \
+        [f"w::shard{j}" for j in range(4)]
+    assert "b" in data.files              # replicated leaf saved once
+    restored = store.restore(str(tmp_path), params)
+    assert jnp.allclose(restored["w"], k)
+    assert "model" in str(restored["w"].sharding.spec)
+    # unsharded template (eval_shape) restores the same values
+    plain = store.restore(str(tmp_path), jax.eval_shape(lambda: params))
+    assert jnp.allclose(plain["w"], k)
+    assert store.restore_plan(str(tmp_path)) == plan
+
+
+@needs_devices
+def test_pipeline_replay_from_json():
+    plan = Planner(MODS, SHAPE, BATCH, mesh=MESH22).plan("pipeline_rows", 4)
+    replayed = ExecutionPlan.from_json(plan.to_json())
+    a = build_apply(MODS, plan)(PARAMS["trunk"], X)
+    b = build_apply(MODS, replayed)(PARAMS["trunk"], X)
+    assert bool(jnp.array_equal(a, b))
+
+
+# ---------------------------------------------------------------------------
+# Planner: per-stage, per-device budget math
+# ---------------------------------------------------------------------------
+
+XI = 3 * 2**20          # params/grads/opt constant that breaks S=1
+BUDGET = 5 * 2**20      # per-device: 5MiB / batch_extent(2) = 2.5MiB
+
+
+def test_estimate_staged_splits_xi_over_model_axis():
+    pl = Planner(MODS, SHAPE, BATCH, mesh=MESH22, xi=XI)
+    staged = pl.estimate("pipeline_rows", 4, stage=StageSpec.even(
+        len(MODS), 2))
+    # single-stage overlap holds all of xi; each pipeline stage holds
+    # xi/model plus one stage's (stash + working set) — strictly less
+    # here, where xi dominates
+    single = pl.estimate("overlap", 4)
+    assert staged < single
+    assert staged >= XI // 2   # the xi share alone lower-bounds a stage
+
+
+def test_staged_solve_rescues_infeasible_budget():
+    """Acceptance: a budget infeasible at S=1 is solved at S=2 and the
+    decision lands in the `pipeline` extra."""
+    pl = Planner(MODS, SHAPE, BATCH, mesh=MESH22, xi=XI)
+    # every single-stage engine is infeasible: xi alone exceeds the
+    # per-device budget
+    for engine in ("base", "overlap", "twophase"):
+        assert not pl.solve(engine, BUDGET).feasible
+    plan = Planner.for_budget(MODS, SHAPE, BATCH, BUDGET, xi=XI,
+                              mesh=MESH22)
+    assert plan.feasible
+    assert plan.engine == "pipeline_rows"
+    assert plan.stage is not None and plan.stage.n_stages == 2
+    assert "pipeline stages over the model axis" in plan.get("pipeline")
+    assert plan.est_bytes_per_device < BUDGET // 2
+    rt = ExecutionPlan.from_json(plan.to_json())
+    assert rt == plan
+
+
+def test_stagedize_noops_without_model_axis():
+    mesh = MeshSpec.parse("data=2")
+    plan = Planner.for_budget(MODS, SHAPE, BATCH, BUDGET, xi=XI, mesh=mesh)
+    assert plan.engine != "pipeline_rows"   # nothing to pipeline onto
+    assert plan.get("pipeline") is None
+
+
+def test_solve_routes_pipeline_engine():
+    pl = Planner(MODS, SHAPE, BATCH, mesh=MESH22, xi=XI)
+    p = pl.solve("pipeline_rows", BUDGET)
+    assert p.engine == "pipeline_rows" and p.feasible
+    assert p.stage.n_stages == 2
+
+
+def test_predict_plan_us_charges_bubble():
+    from repro.exec.costmodel import CostTable
+    table = CostTable(fingerprint="test", flops_per_s=1e12,
+                      h2d_bytes_per_s=1e10, d2h_bytes_per_s=1e10,
+                      row_overhead_us=0.0)
+    pl = Planner(MODS, SHAPE, BATCH, mesh=MESH22)
+    n = 4
+    over = pl.predict_plan_us(pl.plan("overlap", n), table)
+    pipe = pl.predict_plan_us(pl.plan("pipeline_rows", n), table)
+    S = 2
+    expect = over["compute_us"] * (1 + (S - 1) / n)
+    assert pipe["compute_us"] == pytest.approx(expect, rel=1e-6)
+    assert pipe["us"] > over["us"]
